@@ -1,0 +1,31 @@
+"""Benchmark harness utilities: timing + the name,us_per_call,derived CSV."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import numpy as np
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(rows: Iterable[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def dist_stats(vals: List[float]) -> str:
+    a = np.asarray(vals, dtype=np.float64)
+    if a.size == 0:
+        return "n=0"
+    return (f"n={a.size} mean={a.mean():.3f} median={np.median(a):.3f} "
+            f"p25={np.percentile(a, 25):.3f} p75={np.percentile(a, 75):.3f}")

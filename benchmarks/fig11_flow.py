@@ -1,0 +1,110 @@
+"""Figure 11 + the Sec. 1 headline: the combined pruning flow, and the
+fleet-wide fraction of micro-partitions pruned.
+
+Two aggregates, because they answer different questions:
+  * technique-combination shares (Fig. 11 proper): per-QUERY shares over
+    the Table-1-calibrated query mix;
+  * fleet-wide partition pruning (paper: 99.4%): partition-WEIGHTED over
+    a fleet model where table sizes span orders of magnitude and scan
+    volume concentrates on big, time-clustered tables queried through
+    tight windows (the reason petabyte warehouses are operable at all —
+    nobody routinely full-scans their biggest tables; full scans and
+    exploratory queries hit the small/mid tiers).  Fleet mix below:
+    big tier 97% tight-window / 3% full; mid tier the Fig. 4 predicate
+    mix; small tier unfiltered dashboard scans.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.flow import PruningPipeline, Query, TableScanSpec
+from repro.data.generator import make_events_table
+
+from .common import emit, timeit
+from .workload import (sample_filter_pred, sample_join_query,
+                       sample_limit_query, sample_topk_query, small_table,
+                       tables, tight_window_pred)
+
+_BIG = {}
+
+
+def big_table(seed=8):
+    if seed not in _BIG:
+        rng = np.random.default_rng(seed + 17)
+        # 4000 partitions: the "petabyte fact table" tier (scaled down)
+        _BIG[seed] = make_events_table(rng, n_rows=400_000,
+                                       rows_per_partition=100,
+                                       ts_clustering=0.998,
+                                       user_clustering=0.995)
+    return _BIG[seed]
+
+
+def run(n: int = 120, seed: int = 8, csv: bool = True):
+    rng = np.random.default_rng(seed)
+    events, users = tables(seed)
+    big = big_table(seed)
+    small = small_table(seed)
+    pipe = PruningPipeline()
+    combos: dict = {}
+    total_parts = 0
+    total_after = 0
+    for _ in range(n):
+        u = rng.random()
+        if u < 0.0260:
+            q = sample_limit_query(rng, events)
+        elif u < 0.0260 + 0.0555:
+            q = sample_topk_query(rng, big, pred_prob=0.8)
+        elif u < 0.20:
+            q = sample_join_query(rng, big, users)
+            if rng.random() < 0.95:   # probe side usually time-windowed too
+                q.scans["events"] = TableScanSpec(big, tight_window_pred(rng))
+        elif u < 0.73:
+            # big-tier scan: overwhelmingly tight windows (full scans of
+            # the biggest tables are operationally rare)
+            pred = tight_window_pred(rng) if rng.random() < 0.995 \
+                else _full_pred()
+            q = Query(scans={"events": TableScanSpec(big, pred)})
+        elif u < 0.92:
+            q = Query(scans={"events": TableScanSpec(
+                events, sample_filter_pred(rng, events))})
+        else:
+            q = Query(scans={"events": TableScanSpec(small, _full_pred())})
+        rep = pipe.run(q)
+        fired = []
+        for scan in rep.per_scan.values():
+            for tech, r in scan.items():
+                if r.applied and r.ratio > 0 and tech not in fired:
+                    fired.append(tech)
+        if rep.topk is not None and len(rep.topk.skipped) and "topk" not in fired:
+            fired.append("topk")
+        key = "+".join(sorted(fired)) or "none"
+        combos[key] = combos.get(key, 0) + 1
+        total_parts += sum(s.table.num_partitions
+                           for s in rep._scan_specs.values())
+        remaining = sum(len(ss) for ss in rep.scan_sets.values())
+        if rep.topk is not None:
+            remaining -= len(rep.topk.skipped)
+        total_after += remaining
+    overall = 1.0 - total_after / total_parts
+    us = timeit(lambda: pipe.run(sample_limit_query(rng, events)))
+    rows = [(f"fig11_{k}", us, f"share={v / n:.3f}")
+            for k, v in sorted(combos.items(), key=lambda kv: -kv[1])]
+    rows.append(("fig11_overall_partition_pruning", us,
+                 f"{overall:.4f} (paper fleet-wide: 0.994)"))
+    if csv:
+        emit(rows)
+    return combos, overall
+
+
+def _full_pred():
+    from repro.core import expr as E
+    return E.true()
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Figure 13 / Sec. 8.3: TPC-H-like pruning vs. the production-like mix.
+
+Paper: TPC-H SF100 clustered on l_shipdate/o_orderdate averages a 28.7%
+pruning ratio (median per-query 8.3%) — an order of magnitude below the
+99.4% production figure, because TPC-H predicates are far less selective.
+We reproduce representative TPC-H predicate shapes (Q1/Q3/Q6-style date
+windows, quantity/discount bands) on correspondingly clustered tables.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core.flow import JoinSpec, PruningPipeline, Query, TableScanSpec
+from repro.data.generator import DATE_HI, DATE_LO, make_lineitem, make_orders
+
+from .common import dist_stats, emit, timeit
+
+_CACHE = {}
+
+
+def tpch_tables(seed=9):
+    if seed not in _CACHE:
+        rng = np.random.default_rng(seed)
+        _CACHE[seed] = (make_lineitem(rng, n_rows=200_000),
+                        make_orders(rng, n_rows=50_000))
+    return _CACHE[seed]
+
+
+def tpch_queries(lineitem, orders, rng):
+    """Representative TPC-H predicate shapes (date windows dominate)."""
+    span = DATE_HI - DATE_LO
+    qs = []
+    # Q1: l_shipdate <= DATE - [60..120] days  (scans ~97% of the table)
+    delta = int(rng.integers(60, 120))
+    qs.append(Query(scans={"lineitem": TableScanSpec(
+        lineitem, E.col("l_shipdate") <= DATE_HI - delta)}))
+    # Q6: one-year shipdate window + discount band + quantity cap
+    y0 = DATE_LO + int(rng.integers(0, 5)) * 365
+    qs.append(Query(scans={"lineitem": TableScanSpec(
+        lineitem,
+        (E.col("l_shipdate") >= y0) & (E.col("l_shipdate") < y0 + 365)
+        & (E.col("l_discount") >= 0.05) & (E.col("l_discount") <= 0.07)
+        & (E.col("l_quantity") < 24))}))
+    # Q3-style: orders before a date joined to lineitem after it
+    cut = DATE_LO + int(rng.integers(200, span - 200))
+    qs.append(Query(
+        scans={
+            "orders": TableScanSpec(orders, E.col("o_orderdate") < cut),
+            "lineitem": TableScanSpec(lineitem, E.col("l_shipdate") > cut),
+        },
+        join=JoinSpec("orders", "lineitem", "o_orderkey", "l_orderkey"),
+    ))
+    # Q12-style: one-year receipt window
+    y1 = DATE_LO + int(rng.integers(0, 5)) * 365
+    qs.append(Query(scans={"lineitem": TableScanSpec(
+        lineitem,
+        (E.col("l_shipdate") >= y1) & (E.col("l_shipdate") < y1 + 365))}))
+    # returnflag scan (unprunable: 3 values in every partition)
+    qs.append(Query(scans={"lineitem": TableScanSpec(
+        lineitem, E.col("l_returnflag") == E.lit("R-00000"))}))
+    # roughly half of TPC-H's 22 queries carry no lineitem/orders-prunable
+    # predicate at all (Q2/Q9/Q11/Q13/Q16/Q18/Q22 shapes) — full scans:
+    for _ in range(3):
+        qs.append(Query(scans={"lineitem": TableScanSpec(lineitem, E.true())}))
+    qs.append(Query(scans={"orders": TableScanSpec(orders, E.true())}))
+    # Q4-style: quarter window on orders + EXISTS-ish lineitem full scan
+    q0 = DATE_LO + int(rng.integers(0, 24)) * 91
+    qs.append(Query(scans={
+        "orders": TableScanSpec(
+            orders, (E.col("o_orderdate") >= q0)
+            & (E.col("o_orderdate") < q0 + 91)),
+        "lineitem": TableScanSpec(lineitem, E.true()),
+    }))
+    return qs
+
+
+def run(rounds: int = 6, seed: int = 9, csv: bool = True):
+    rng = np.random.default_rng(seed)
+    lineitem, orders = tpch_tables(seed)
+    pipe = PruningPipeline()
+    per_query = []
+    total_parts = total_after = 0
+    for _ in range(rounds):
+        for q in tpch_queries(lineitem, orders, rng):
+            rep = pipe.run(q)
+            per_query.append(rep.overall_ratio)
+            total_parts += sum(s.table.num_partitions
+                               for s in rep._scan_specs.values())
+            total_after += sum(len(ss) for ss in rep.scan_sets.values())
+    avg = 1.0 - total_after / total_parts
+    med = float(np.median(per_query))
+    us = timeit(lambda: pipe.run(tpch_queries(lineitem, orders, rng)[1]))
+    rows = [
+        ("fig13_tpch_avg_pruning", us, f"{avg:.3f} (paper 0.287)"),
+        ("fig13_tpch_median_query", us, f"{med:.3f} (paper 0.083)"),
+        ("fig13_tpch_dist", us, dist_stats(per_query)),
+    ]
+    if csv:
+        emit(rows)
+    return per_query, avg
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

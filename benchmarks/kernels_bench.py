@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: device (jnp ref / interpret kernel) vs the
+host engine, plus the pass-count halving of one-pass fully-matching.
+
+On this CPU container the interpret-mode kernel timing is NOT a TPU
+number — the derived columns therefore report op-level quantities
+(partitions/s on the jnp path, bytes of metadata touched) that transfer,
+and EXPERIMENTS.md §Perf reasons about the TPU roofline for the kernels
+analytically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core.prune_filter import (eval_ranges_tv, eval_tv, extract_ranges,
+                                     fully_matching_two_pass)
+from repro.data.generator import make_events_table
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def run(P: int = 100_000, csv: bool = True):
+    rng = np.random.default_rng(0)
+    events = make_events_table(rng, n_rows=P, rows_per_partition=1,
+                               ts_clustering=0.99)
+    stats = events.stats
+    pred = (E.col("ts") >= 9_000_000) & (E.col("user_id") >= 100_000) \
+        & (E.col("user_id") <= 400_000)
+    ranges = extract_ranges(pred, stats)
+
+    us_host = timeit(lambda: eval_ranges_tv(ranges, stats))
+    us_dev = timeit(lambda: ops.prune_ranges_device(ranges, stats, mode="ref"))
+    lo, hi, mins, maxs, nullable = ops.stage_ranges(ranges, stats)
+    import jax
+    ref_jit = jax.jit(ref.minmax_prune_ref)
+    ref_jit(lo, hi, mins, maxs, nullable).block_until_ready()
+    us_dev_hot = timeit(
+        lambda: ref_jit(lo, hi, mins, maxs, nullable).block_until_ready())
+
+    # one-pass vs two-pass fully-matching (DESIGN.md §6.1)
+    us_one = timeit(lambda: eval_tv(pred, stats))
+    us_two = timeit(lambda: (eval_tv(pred, stats),
+                             fully_matching_two_pass(pred, stats)))
+
+    # top-k boundary kernel staging
+    vals = events.data["num_sightings"].astype(np.float32)
+    rows = ops.build_block_topk(vals[: 20_000], np.arange(0, 20_001, 100), 8)
+    order = np.argsort(-rows[:, 0])
+    us_topk = timeit(lambda: ops.topk_boundary_device(rows[order], mode="ref"))
+    us_topk_prefix = timeit(
+        lambda: ops.topk_boundary_device(rows[order], mode="prefix"))
+
+    meta_bytes = P * stats.num_columns * 8 * 2
+    rows_out = [
+        ("kern_minmax_host_numpy", us_host, f"P={P} {P / us_host:.0f} parts/us"),
+        ("kern_minmax_jnp_cold", us_dev, "includes staging H->D"),
+        ("kern_minmax_jnp_hot", us_dev_hot,
+         f"{meta_bytes / (us_dev_hot * 1e-6) / 1e9:.2f} GB/s metadata"),
+        ("kern_fully_matching_one_pass", us_one, "single metadata pass"),
+        ("kern_fully_matching_two_pass", us_two,
+         f"x{us_two / us_one:.2f} of one-pass (paper needs both passes)"),
+        ("kern_topk_boundary_seq", us_topk, "lax.scan formulation"),
+        ("kern_topk_boundary_prefix", us_topk_prefix,
+         f"associative-scan, x{us_topk / max(us_topk_prefix, 1e-9):.2f} vs seq"),
+    ]
+    if csv:
+        emit(rows_out)
+    return rows_out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

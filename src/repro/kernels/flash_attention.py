@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The LM-side compute hot spot: the prefill_32k shapes spend most of their
+FLOPs here.  Classic flash algorithm — online softmax with running
+(max, sum, accumulator) carried in VMEM scratch across KV blocks — tiled
+for the MXU: Q blocks of BLOCK_Q x D against KV blocks of BLOCK_K x D,
+grid (batch*heads, nQ, nK) with the KV dimension innermost (sequential,
+accumulating).
+
+Fully-masked blocks (k-block strictly after the q-block under causality)
+are skipped with pl.when — the causal schedule does ~half the block work.
+
+Distribution: under pjit the kernel runs per-shard inside shard_map with
+heads already sharded over `model` (each device sees its local [B, S,
+H_local, D] slice); ops.flash_attention is the single-device entry the
+tests validate in interpret mode against the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, nk: int, sq: int, sk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = iq * BLOCK_Q
+    k_lo = ik * BLOCK_K
+    # causal: the whole k-block is masked iff k_lo > q_hi
+    live = (not causal) or (k_lo <= q_lo + BLOCK_Q - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)            # [BK, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+        q_ids = q_lo + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_Q, BLOCK_K), 0)
+        k_ids = k_lo + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_Q, BLOCK_K), 1)
+        mask = k_ids < sk                           # strip K padding
+        if causal:
+            mask &= k_ids <= q_ids
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                         # [BQ]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(
+    q: jax.Array,   # [BH, Sq, D]
+    k: jax.Array,   # [BH, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = D ** -0.5
+    pad_q = (-Sq) % BLOCK_Q
+    pad_k = (-Sk) % BLOCK_K
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = (Sq + pad_q) // BLOCK_Q
+    nk = (Sk + pad_k) // BLOCK_K
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          nk=nk, sq=Sq, sk=Sk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+            pltpu.VMEM((BLOCK_Q,), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

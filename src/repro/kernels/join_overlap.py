@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: build-side distinct keys vs probe partition ranges.
+
+The exact path of JOIN pruning (paper Sec. 6): given the build side's
+sorted distinct join keys and every probe partition's [min, max] key
+range, decide per partition whether ANY build key falls inside its range
+— partitions with no hit are pruned before they are fetched.
+
+TPU adaptation: a CPU engine binary-searches each partition's bounds in
+the distinct list (branchy, gather-heavy).  Here it becomes an all-pairs
+compare ``[BLOCK_P, BLOCK_D]`` with an any-reduction — dense, branch-free
+VPU work with perfect locality: distinct-key blocks stream through VMEM
+while the partition block's accumulator is revisited (grid is
+(P_blocks, D_blocks) with accumulation over the inner D dimension).
+
+Pad value for the distinct list is NaN: NaN compares false against every
+bound, so padding never produces a hit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 1024
+BLOCK_D = 2048
+
+
+def _join_overlap_kernel(pmin_ref, pmax_ref, dist_ref, hit_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        hit_ref[...] = jnp.zeros_like(hit_ref)
+
+    pmin = pmin_ref[0, :]          # [BP]
+    pmax = pmax_ref[0, :]          # [BP]
+    d = dist_ref[0, :]             # [BD]
+    inside = (d[None, :] >= pmin[:, None]) & (d[None, :] <= pmax[:, None])
+    hit_ref[...] |= jnp.any(inside, axis=1).astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def join_overlap(
+    pmin: jax.Array,     # [P] f32 probe partition minima of the key column
+    pmax: jax.Array,     # [P] f32 probe partition maxima
+    distinct: jax.Array, # [D] f32 sorted distinct build keys
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns hit [P] int32 (0 -> partition is prunable)."""
+    P = pmin.shape[0]
+    D = distinct.shape[0]
+    pad_p = (-P) % BLOCK_P
+    pad_d = (-D) % BLOCK_D
+    if pad_p:
+        pmin = jnp.pad(pmin, (0, pad_p), constant_values=jnp.inf)
+        pmax = jnp.pad(pmax, (0, pad_p), constant_values=-jnp.inf)
+    if pad_d:
+        distinct = jnp.pad(distinct, (0, pad_d), constant_values=jnp.nan)
+    Pp, Dp = P + pad_p, D + pad_d
+    grid = (Pp // BLOCK_P, Dp // BLOCK_D)
+    hit = pl.pallas_call(
+        _join_overlap_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_P), lambda i, j: (0, i)),
+            pl.BlockSpec((1, BLOCK_P), lambda i, j: (0, i)),
+            pl.BlockSpec((1, BLOCK_D), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_P), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Pp), jnp.int32),
+        interpret=interpret,
+    )(pmin[None, :], pmax[None, :], distinct[None, :])
+    return hit[0, :P]

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: conjunctive-range three-valued pruning.
+
+The hot path of compile-/run-time filter pruning (paper Sec. 3): evaluate a
+conjunction of K closed column ranges against per-partition min/max/null
+metadata for P partitions and emit the three-valued match lattice
+(NO=0 / PARTIAL=1 / FULL=2).
+
+TPU adaptation (DESIGN.md §2): Snowflake evaluates pruning predicates
+partition-at-a-time on CPUs; here the metadata is packed ``[K, P]``
+(constraint-major, partitions on the 128-wide lane dimension) so one VPU
+op processes 8x128 partitions per constraint.  The caller pre-gathers the
+per-constraint stat columns (an XLA gather), so the kernel body is pure
+branch-free elementwise work plus a min-reduction over K.
+
+Block layout:
+  mins/maxs/nullable: [K, P] f32 tiles of shape (K, BLOCK_P) in VMEM
+  lo/hi:              [K, 1]  f32, the same block every grid step
+  tv out:             [1, P] int32 tiles of shape (1, BLOCK_P)
+
+P is padded to a multiple of BLOCK_P by the ops.py wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 2048  # partitions per grid step: K*BLOCK_P*4B*3 stays << VMEM
+
+
+def _minmax_prune_kernel(lo_ref, hi_ref, mins_ref, maxs_ref, null_ref, tv_ref):
+    lo = lo_ref[...]            # [K, 1]
+    hi = hi_ref[...]            # [K, 1]
+    pmin = mins_ref[...]        # [K, BP]
+    pmax = maxs_ref[...]        # [K, BP]
+    nullable = null_ref[...]    # [K, BP] (0.0 / 1.0)
+
+    empty = pmin > pmax  # all-null column in partition: empty interval
+    no = (pmax < lo) | (pmin > hi) | empty
+    full = (pmin >= lo) & (pmax <= hi) & (nullable == 0.0) & ~empty
+    tv_k = jnp.where(no, 0, jnp.where(full, 2, 1)).astype(jnp.int32)
+    tv_ref[...] = jnp.min(tv_k, axis=0, keepdims=True)  # AND = min over K
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minmax_prune(
+    lo: jax.Array,        # [K] f32 range lows  (inclusive)
+    hi: jax.Array,        # [K] f32 range highs (inclusive)
+    mins: jax.Array,      # [K, P] f32 per-constraint partition minima
+    maxs: jax.Array,      # [K, P] f32 per-constraint partition maxima
+    nullable: jax.Array,  # [K, P] f32 (1.0 where the column has nulls)
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns tv [P] int32 in {0, 1, 2}."""
+    K, P = mins.shape
+    pad = (-P) % BLOCK_P
+    if pad:
+        # Padding partitions get an empty interval -> tv 0; sliced off below.
+        mins = jnp.pad(mins, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        maxs = jnp.pad(maxs, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        nullable = jnp.pad(nullable, ((0, 0), (0, pad)))
+    Pp = P + pad
+    grid = (Pp // BLOCK_P,)
+    tv = pl.pallas_call(
+        _minmax_prune_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, BLOCK_P), lambda i: (0, i)),
+            pl.BlockSpec((K, BLOCK_P), lambda i: (0, i)),
+            pl.BlockSpec((K, BLOCK_P), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_P), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Pp), jnp.int32),
+        interpret=interpret,
+    )(lo[:, None], hi[:, None], mins, maxs, nullable)
+    return tv[0, :P]

@@ -1,0 +1,112 @@
+"""jit'd wrappers wiring the Pallas kernels into the pruning engine.
+
+Each op auto-selects the Pallas kernel on TPU, the interpret-mode kernel
+when ``interpret=True`` (CPU validation), or the pure-jnp ref as fallback.
+Host-side NumPy metadata is staged to device arrays here; the core engine
+(core/*) stays NumPy-pure so compile-time pruning never touches a device.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.metadata import PartitionStats
+from . import ref
+from .join_overlap import join_overlap
+from .minmax_prune import minmax_prune
+from .topk_boundary import topk_boundary
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def stage_ranges(
+    ranges: List[Tuple[int, float, float]], stats: PartitionStats
+):
+    """Gather per-constraint stat rows into the kernel's [K, P] layout."""
+    cids = np.array([c for c, _, _ in ranges], dtype=np.int64)
+    lo = jnp.asarray(np.array([l for _, l, _ in ranges], dtype=np.float32))
+    hi = jnp.asarray(np.array([h for _, _, h in ranges], dtype=np.float32))
+    mins = jnp.asarray(stats.mins.T[cids].astype(np.float32))
+    maxs = jnp.asarray(stats.maxs.T[cids].astype(np.float32))
+    nullable = jnp.asarray((stats.null_counts.T[cids] > 0).astype(np.float32))
+    return lo, hi, mins, maxs, nullable
+
+
+def prune_ranges_device(
+    ranges: List[Tuple[int, float, float]],
+    stats: PartitionStats,
+    mode: str = "auto",          # 'auto' | 'pallas' | 'interpret' | 'ref'
+) -> np.ndarray:
+    """Three-valued conjunctive-range pruning on device; returns tv [P]."""
+    lo, hi, mins, maxs, nullable = stage_ranges(ranges, stats)
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        tv = ref.minmax_prune_ref(lo, hi, mins, maxs, nullable)
+    else:
+        tv = minmax_prune(lo, hi, mins, maxs, nullable,
+                          interpret=(mode == "interpret") or not _on_tpu())
+    return np.asarray(tv)
+
+
+def build_block_topk(
+    values: np.ndarray,
+    part_bounds: np.ndarray,
+    k: int,
+    mask: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Per-partition block top-k table [P, k] (desc, -inf padded).
+
+    This is the metadata-sketch the TPU top-k path consumes; masked-out
+    rows (filter misses, nulls) are excluded.
+    """
+    P = len(part_bounds) - 1
+    out = np.full((P, k), -np.inf, dtype=np.float32)
+    for p in range(P):
+        s, e = int(part_bounds[p]), int(part_bounds[p + 1])
+        v = values[s:e]
+        if mask is not None:
+            v = v[mask[s:e]]
+        if v.size:
+            top = np.sort(v)[::-1][:k]
+            out[p, : len(top)] = top
+    return out
+
+
+def topk_boundary_device(
+    rows: np.ndarray,
+    b_init: float = -np.inf,
+    mode: str = "auto",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(skip [P], heap [k]) for pre-ordered block top-k rows."""
+    rows_j = jnp.asarray(rows, dtype=jnp.float32)
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        skip, heap = ref.topk_boundary_ref(rows_j, b_init)
+    elif mode == "prefix":
+        skip, heap = ref.topk_boundary_prefix_ref(rows_j, b_init)
+    else:
+        skip, heap = topk_boundary(rows_j, jnp.float32(b_init),
+                                   interpret=(mode == "interpret") or not _on_tpu())
+    return np.asarray(skip), np.asarray(heap)
+
+
+def join_overlap_device(
+    stats: PartitionStats,
+    key_col: str,
+    distinct: np.ndarray,
+    mode: str = "auto",
+) -> np.ndarray:
+    """hit [P] int32: 1 where a build key may live in the partition."""
+    pmin = jnp.asarray(stats.col_min(key_col).astype(np.float32))
+    pmax = jnp.asarray(stats.col_max(key_col).astype(np.float32))
+    d = jnp.asarray(np.asarray(distinct, dtype=np.float32))
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        hit = ref.join_overlap_ref(pmin, pmax, d)
+    else:
+        hit = join_overlap(pmin, pmax, d,
+                           interpret=(mode == "interpret") or not _on_tpu())
+    return np.asarray(hit)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: top-k boundary-value scan (paper Sec. 5).
+
+The WAND-style runtime pruning loop as a TPU kernel.  Input is the
+per-partition *block top-k table*: ``rows[P, k]`` where row p holds
+partition p's k largest (signed) order-column values sorted descending,
+padded with -inf (rows are pre-arranged in processing order — Sec. 5.3 —
+and pre-masked by the scan's filter predicate).  The kernel walks the
+partitions sequentially, carrying the global top-k heap, and emits
+
+  * ``skip[P]``  — 1 where the partition would be pruned by the boundary
+                   (these partitions would never be fetched from storage),
+  * ``heap[k]``  — the final top-k values.
+
+Skip rule (proved in core/prune_topk.py and hypothesis-tested):
+  with B = upfront boundary (Sec. 5.4) and H = current heap k-th value,
+  skip iff  block_max < max(B, H)  or  (heap full and block_max <= H).
+
+TPU mapping: the heap/row merge is *rank-selection* — an all-pairs
+comparison of the 2k candidates followed by a one-hot combine — which is
+branch-free VPU work (2k <= 256 lanes), instead of the CPU heap's
+branchy sift-down.  The partition dimension is blocked (BLOCK_ROWS rows
+per grid step) with the heap carried across grid steps in VMEM scratch.
+The sequential carry is the paper's semantics; a fully parallel
+formulation (associative prefix merge) is discussed in DESIGN.md §6 and
+validated in the ref oracle.
+
+Values must be finite (the wrapper uses -inf as padding / null encoding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_ROWS = 256
+
+
+def _merge_topk(heap: jax.Array, row: jax.Array, k: int) -> jax.Array:
+    """Top-k of two descending-sorted length-k vectors via rank selection."""
+    cand = jnp.concatenate([heap, row])                     # [2k]
+    n = 2 * k
+    ci = cand[:, None]                                      # value of i
+    cj = cand[None, :]                                      # value of j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    rank = jnp.sum((cj > ci) | ((cj == ci) & (jj < ii)), axis=1)  # [2k]
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (k, n), 0)
+    sel = (rank[None, :] == tgt).astype(cand.dtype)         # one-hot [k, 2k]
+    return jnp.sum(sel * cand[None, :], axis=1)             # [k]
+
+
+def _topk_boundary_kernel(binit_ref, rows_ref, skip_ref, heap_ref, scratch):
+    k = rows_ref.shape[1]
+    bp = rows_ref.shape[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        scratch[...] = jnp.full_like(scratch, -jnp.inf)
+
+    b_init = binit_ref[0, 0]
+    heap0 = scratch[0, :]
+
+    def body(j, carry):
+        heap, skips = carry
+        row = rows_ref[j, :]
+        h_kth = heap[k - 1]
+        heap_full = h_kth > -jnp.inf
+        bm = row[0]
+        eff = jnp.maximum(b_init, jnp.where(heap_full, h_kth, -jnp.inf))
+        skip = (bm < eff) | (heap_full & (bm <= h_kth))
+        merged = _merge_topk(heap, row, k)
+        heap = jnp.where(skip, heap, merged)
+        skips = skips.at[j].set(skip.astype(jnp.int32))
+        return heap, skips
+
+    heap, skips = jax.lax.fori_loop(
+        0, bp, body, (heap0, jnp.zeros((bp,), jnp.int32))
+    )
+    scratch[0, :] = heap
+    skip_ref[...] = skips[None, :]
+    heap_ref[...] = heap[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_boundary(
+    rows: jax.Array,      # [P, k] f32, desc-sorted rows, -inf padded
+    b_init: jax.Array,    # scalar f32 upfront boundary (-inf if none)
+    interpret: bool = False,
+):
+    """Returns (skip [P] int32, heap [k] f32)."""
+    P, k = rows.shape
+    pad = (-P) % BLOCK_ROWS
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0)), constant_values=-jnp.inf)
+    Pp = P + pad
+    grid = (Pp // BLOCK_ROWS,)
+    skip, heap = pl.pallas_call(
+        _topk_boundary_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK_ROWS), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Pp), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), rows.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, k), rows.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(b_init, rows.dtype).reshape(1, 1), rows)
+    # padding rows can never un-skip; slice them off
+    return skip[0, :P], heap[0]

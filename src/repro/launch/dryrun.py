@@ -1,0 +1,236 @@
+import os
+
+_DEVS = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_DEVS} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+architecture and input shape, the train/prefill/decode step is lowered
+with the production shardings and compiled AOT on 512 virtual devices
+(single-pod 16x16 and multi-pod 2x16x16).  Outputs per cell:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis()    — HLO FLOPs / bytes for EXPERIMENTS.md §Roofline
+  * collective bytes   — parsed from the optimized HLO
+
+Results append to a JSON file so the 34-cell sweep is resumable.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only] [--out results.json]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import SHAPES, shape_supported
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (arch_rules, cache_shardings, decode_specs,
+                                prefill_batch_specs, train_batch_specs)
+from repro.models import build_model
+from repro.models.sharding import tree_abstract, tree_shardings, use_mesh
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.train_step import abstract_state, make_train_step
+
+
+def _sharding_tree_for_state(model, optimizer, mesh, rules):
+    param_sh = tree_shardings(model.specs, mesh, rules)
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+    return TrainState(
+        params=param_sh,
+        opt=AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=param_sh,
+            v=param_sh,
+        ),
+        error=None,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[dict] = None, smoke: bool = False):
+    """Returns (compiled, lowered, mesh, meta) for one cell."""
+    import dataclasses as dc
+
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if smoke:
+        shape = dc.replace(shape, seq_len=min(shape.seq_len, 128),
+                           global_batch=min(shape.global_batch, 16))
+        if cfg.family == "vlm":
+            shape = dc.replace(shape, seq_len=max(shape.seq_len, cfg.n_prefix * 2))
+    skip = shape_supported(cfg, shape_name)
+    if skip is not None:
+        return None, None, None, {"skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = arch_rules(cfg, mesh, kind=shape.kind)
+    model = build_model(cfg)
+    optimizer = AdamW(lr=cosine_schedule(3e-4),
+                      state_dtype=jnp.dtype(cfg.optimizer_state_dtype))
+
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            step = make_train_step(model, optimizer)
+            state = abstract_state(model, optimizer)
+            state_sh = _sharding_tree_for_state(model, optimizer, mesh, rules)
+            batch, batch_sh = train_batch_specs(cfg, shape, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            params = tree_abstract(model.specs)
+            params_sh = tree_shardings(model.specs, mesh, rules)
+            batch, batch_sh = prefill_batch_specs(cfg, shape, mesh)
+            cache_sh = cache_shardings(
+                cfg, model.init_cache(shape.global_batch, shape.seq_len), mesh)
+            fn = lambda p, b: model.prefill_fn(p, b, shape.seq_len)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            )
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            params = tree_abstract(model.specs)
+            params_sh = tree_shardings(model.specs, mesh, rules)
+            (cache, tokens, position), (cache_sh, tok_sh, pos_sh) = decode_specs(
+                cfg, shape, mesh, model)
+            jitted = jax.jit(
+                model.decode_fn,
+                in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, cache, tokens, position)
+
+        compiled = lowered.compile()
+    return compiled, lowered, mesh, {"skipped": None}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[dict] = None, hlo_roofline: bool = True,
+             smoke: bool = False) -> dict:
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    try:
+        compiled, lowered, mesh, meta = lower_cell(
+            arch, shape_name, multi_pod, overrides, smoke=smoke)
+        if meta["skipped"]:
+            rec.update(status="SKIP", reason=meta["skipped"])
+            return rec
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["status"] = "OK"
+        rec["compile_s"] = round(time.time() - t0, 1)
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes"):
+                rec[k] = getattr(mem, k, None)
+            args = rec.get("argument_size_in_bytes") or 0
+            alias = rec.get("alias_size_in_bytes") or 0
+            out = rec.get("output_size_in_bytes") or 0
+            temp = rec.get("temp_size_in_bytes") or 0
+            rec["peak_bytes_per_device"] = args + out + temp - alias
+        if hlo_roofline:
+            hlo = compiled.as_text()
+            rl = RL.derive(cfg, shape, hlo, rec["chips"], cost)
+            rec["roofline"] = rl.to_dict()
+        return rec
+    except Exception as e:  # noqa: BLE001 — a failed cell is a result
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 mesh (default: single-pod 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs/shapes: validates the code path")
+    ap.add_argument("--opt", action="store_true",
+                    help="§Perf optimizations: resident-MoE sharding, "
+                         "TP-resident decode weights, vocab padding")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+    opt_overrides = dict(moe_dispatch="grouped", moe_sharding="expert_only",
+                         serve_resident=True,
+                         pad_vocab_to=128) if args.opt else None
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch, shape, mp in cells:
+        key = (arch, shape, "2x16x16" if mp else "16x16")
+        if key in done:
+            print(f"[dryrun] {key} cached", flush=True)
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        rec = run_cell(arch, shape, mp, overrides=opt_overrides,
+                       smoke=args.smoke)
+        status = rec["status"]
+        extra = rec.get("reason") or rec.get("error") or ""
+        peak = rec.get("peak_bytes_per_device")
+        peak_s = f" peak={peak/2**30:.2f}GiB" if peak else ""
+        rl = rec.get("roofline") or {}
+        bn = f" bottleneck={rl.get('bottleneck')}" if rl else ""
+        print(f"[dryrun] {key} -> {status}{peak_s}{bn} {extra}", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"[dryrun] total={len(results)} ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax use).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis composes
+with `data` into the DP/FSDP dimension (hierarchical gradient reduction:
+reduce-scatter over ICI first, cross-pod all-reduce over DCN last).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    # REPRO_MESH_SCALE=n shrinks every axis by n for CI-scale validation
+    # of the identical code path (tests/test_dryrun.py uses 8 devices).
+    scale = int(os.environ.get("REPRO_MESH_SCALE", "1"))
+    d, m = 16 // scale, 16 // scale
+    shape = (2, d, m) if multi_pod else (d, m)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host offers, as a (data, model) mesh — used by tests
+    and CPU-scale examples."""
+    n = len(jax.devices())
+    model = 1
+    for m in (4, 2):
+        if n % m == 0 and n > m:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

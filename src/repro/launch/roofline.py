@@ -1,0 +1,239 @@
+"""Roofline-term derivation for the dry-run cells.
+
+Three terms per (arch x shape x mesh), in seconds — the dominant one is
+the bottleneck the §Perf loop works on:
+
+  compute    = analytic_flops / (chips * peak_FLOPs)
+  memory     = analytic_hbm_bytes / (chips * HBM_bw)
+  collective = hlo_collective_bytes_per_device / link_bw
+
+Why analytic compute/memory instead of cost_analysis(): XLA's
+HloCostAnalysis counts while-loop bodies ONCE, and this codebase runs
+layers, attention chunks, MoE dispatch chunks, SSD chunks and the CE loss
+under lax.scan — the measured flops under-count by the product of trip
+counts (verified empirically in EXPERIMENTS.md §Dry-run).  Analytic
+matmul-exact accounting (PaLM-appendix style MFU math) is the standard
+production practice and is what we report; raw cost_analysis numbers are
+kept in the results JSON for transparency.
+
+Collective bytes ARE taken from the optimized per-device HLO (they are
+not in cost_analysis): every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction contributes its largest shape
+(per-device bytes under SPMD).  Instructions inside non-ENTRY computations
+(loop bodies — in this codebase, the layer scan) are multiplied by the
+layer trip count; ENTRY-level collectives (gradient reduce-scatter, logit
+reductions) count once.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (values from the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+    r"\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str, loop_trip: int = 1) -> Dict[str, float]:
+    """Per-collective-kind bytes over the optimized per-device HLO.
+
+    The HLO module lists computations; ENTRY holds top-level instructions,
+    every other computation is a fusion / loop body / remat region.
+    Collectives never live inside fusions, so non-ENTRY collectives are in
+    loop bodies and are scaled by ``loop_trip`` (the layer-scan count).
+    """
+    out: Dict[str, float] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+        elif line and not line[0].isspace() and "{" in line:
+            in_entry = False
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sizes = [shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line)]
+        if sizes:
+            mult = 1 if in_entry else loop_trip
+            out[kind] = out.get(kind, 0.0) + float(max(sizes)) * mult
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / HBM models (documented in EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+def _attention_layers(cfg) -> int:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every     # shared block applications
+    if cfg.family == "encdec":
+        return cfg.n_enc_layers + 2 * cfg.n_layers  # self + cross
+    return 0
+
+
+def _matmul_params(cfg) -> int:
+    """Active parameters that participate in matmuls (embedding gather
+    excluded; unembedding projection included)."""
+    n = cfg.active_param_count()
+    emb_factor = 1 if cfg.tie_embeddings else 2
+    n -= cfg.vocab * cfg.d_model * emb_factor     # remove both tables
+    n += cfg.vocab * cfg.d_model                  # unembed matmul is real
+    return n
+
+
+def _ssd_extra_flops_per_token(cfg) -> float:
+    """SSD state-path flops/token beyond the projections (per layer):
+    intra-chunk dual form ~ 2*q*(n + p) per token-pair column + state
+    update/output ~ 6*p*n per head."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    h, p, n, q = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_chunk
+    intra = 2.0 * q * (n + p) * h / 2.0           # causal half
+    inter = 6.0 * p * n * h
+    return (intra + inter) * cfg.n_layers
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Global FLOPs for one step of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    tokens = B if decode else B * S
+    kv_len = S if decode else S / 2               # causal average
+
+    base = 2.0 * _matmul_params(cfg) * tokens
+    hd = cfg.resolved_head_dim
+    attn = 4.0 * kv_len * cfg.n_heads * hd * _attention_layers(cfg) * tokens
+    ssd = _ssd_extra_flops_per_token(cfg) * tokens
+    fwd = base + attn + ssd
+    if shape.kind == "train":
+        # 1 fwd + 2 bwd (+1 remat recompute of the fwd)
+        return fwd * (4.0 if cfg.remat else 3.0)
+    return fwd
+
+
+def analytic_hbm_bytes(cfg, shape, chips: int) -> float:
+    """Global HBM traffic model for one step.
+
+    train:   weights bf16 read fwd+bwd (2x) + grad write/read (f32) +
+             optimizer m,v read+write (state dtype) + activation traffic
+             ~ 12 bf16 touches per token per layer-equivalent.
+    prefill: weights read + activations + KV-cache write.
+    decode:  weights read + KV/state cache read (+tiny writes) — the
+             classic decode bound.
+    Per-device weight traffic never drops below the full shard (weights
+    are read wherever they live); activation traffic scales with tokens.
+    """
+    import numpy as np
+
+    B, S = shape.global_batch, shape.seq_len
+    p_bytes = cfg.param_count() * 2.0
+    opt_bytes = cfg.param_count() * (4.0 if cfg.optimizer_state_dtype ==
+                                     "float32" else 2.0) * 2.0
+    layers_eq = max(cfg.n_layers, 1)
+    act_per_tok_layer = 12.0 * cfg.d_model * 2.0
+    kv_heads = max(cfg.n_kv_heads, 0)
+    hd = cfg.resolved_head_dim
+
+    if shape.kind == "train":
+        tokens = B * S
+        acts = tokens * layers_eq * act_per_tok_layer * (1.5 if cfg.remat else 1.0)
+        grads = cfg.param_count() * 4.0 * 2.0
+        return 2.0 * p_bytes + grads + 2.0 * opt_bytes + acts
+    if shape.kind == "prefill":
+        tokens = B * S
+        acts = tokens * layers_eq * act_per_tok_layer / 2.0
+        kv = tokens * _attention_layers(cfg) * kv_heads * hd * 2 * 2.0
+        return p_bytes + acts + kv
+    # decode: read all weights + the whole KV/state cache once per step
+    kv = B * S * _attention_layers(cfg) * kv_heads * hd * 2 * 2.0
+    if cfg.family in ("ssm", "hybrid"):
+        kv += B * cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+        if cfg.family == "ssm":
+            kv = B * cfg.n_layers * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+    acts = B * layers_eq * act_per_tok_layer
+    return p_bytes + kv + acts
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # global analytic flops
+    hbm_bytes: float             # global analytic bytes
+    coll_bytes: float            # per-device HLO collective bytes
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6*N_active*D (train) — the MFU numerator
+    useful_ratio: float          # model_flops / analytic flops
+    chips: int
+    raw_cost_flops: float = 0.0  # XLA cost_analysis (loop bodies once)
+    raw_cost_bytes: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MFU numerator: 6*N_active*tokens (train) or 2*N_active*tokens."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def derive(cfg, shape, hlo_text: str, chips: int,
+           cost: Optional[Dict[str, float]] = None) -> Roofline:
+    loop_trip = cfg.n_layers // cfg.attn_every if cfg.family == "hybrid" \
+        else max(cfg.n_layers, 1)
+    coll = collective_bytes(hlo_text, loop_trip=loop_trip)
+    coll_total = sum(coll.values())
+
+    flops = analytic_flops(cfg, shape)
+    hbm = analytic_hbm_bytes(cfg, shape, chips)
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm / (chips * HBM_BW)
+    collective_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_for(cfg, shape)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=coll_total,
+        coll_breakdown=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=mf, useful_ratio=mf / flops if flops else 0.0,
+        chips=chips,
+        raw_cost_flops=float((cost or {}).get("flops", 0.0)),
+        raw_cost_bytes=float((cost or {}).get("bytes accessed", 0.0)),
+    )

@@ -1,0 +1,121 @@
+"""Abstract input specs + sharding assignments for every (arch x shape).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no allocation) for each step function's inputs, plus
+the matching PartitionSpecs.
+
+Sharding policy (DESIGN.md §4):
+  tokens/labels  [B, S]         -> (('pod','data'), None); B=1 replicates
+  prefix embeds  [B, T, d]      -> (dp, None, None)
+  KV caches      [L, B, S, KV, D]: heads over `model` when divisible,
+                 otherwise the SEQUENCE dim over `model` (context
+                 parallelism) — decided per arch (e.g. GLM-4 kv=2, Kimi
+                 kv=8 -> sequence-sharded caches).
+  params/opt     from ParamSpec logical axes (FSDP over ('pod','data')
+                 via the 'embed' rule + TP over 'model').
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models.model import Model
+from ..models.sharding import resolve_axis
+
+
+def arch_rules(cfg: ModelConfig, mesh: Mesh, kind: str = "train") -> Dict[str, Any]:
+    """Per-arch rule overrides.
+
+    * context-parallel KV caches when the KV heads can't TP-shard;
+    * §Perf H2: decode with TP-resident weights — the per-step FSDP
+      all-gather of every parameter is the decode bottleneck, so the
+      'embed' (FSDP) dim replicates and weights live sharded over `model`
+      (+ experts over the DP axes in resident-MoE mode).
+    """
+    tp = mesh.shape.get("model", 1)
+    rules: Dict[str, Any] = {}
+    if cfg.n_kv_heads and tp > 1 and cfg.n_kv_heads % tp != 0:
+        rules["kv_seq"] = "model"
+    if cfg.no_fsdp or (kind == "decode" and cfg.serve_resident):
+        rules["embed"] = None
+    return rules
+
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> Any:
+    dp = resolve_axis(global_batch, ("pod", "data"), mesh)
+    return dp
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    dp = batch_pspec(mesh, B)
+    n_tok = S - (cfg.n_prefix if cfg.family == "vlm" else 0)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, n_tok), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, n_tok), jnp.int32),
+    }
+    pspecs = {
+        "tokens": NamedSharding(mesh, P(dp, None)),
+        "labels": NamedSharding(mesh, P(dp, None)),
+    }
+    if cfg.frontend != "none":
+        batch["prefix"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix, cfg.d_model), jnp.float32)
+        pspecs["prefix"] = NamedSharding(mesh, P(dp, None, None))
+    return batch, pspecs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    return train_batch_specs(cfg, shape, mesh)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """PartitionSpecs for the decode cache pytree, per family."""
+    tp = mesh.shape.get("model", 1)
+    kv_on_heads = cfg.n_kv_heads and tp > 1 and cfg.n_kv_heads % tp == 0
+
+    def kv_spec(ndim_prefix: int, batch: int, seq: int, kv: int):
+        dp = batch_pspec(mesh, batch)
+        if kv_on_heads:
+            return P(*([None] * ndim_prefix), dp, None,
+                     resolve_axis(kv, "model", mesh), None)
+        # context parallelism — but only if the cache length divides
+        # (e.g. whisper's 1500-frame cross-attention K/V replicates)
+        return P(*([None] * ndim_prefix), dp,
+                 resolve_axis(seq, "model", mesh), None, None)
+
+    def leaf_spec(path: str, s: jax.ShapeDtypeStruct):
+        nd = len(s.shape)
+        if path in ("k", "v", "xk", "xv"):
+            batch, seq, kv = s.shape[nd - 4], s.shape[nd - 3], s.shape[nd - 2]
+            return kv_spec(nd - 4, batch, seq, kv)
+        if path == "s":       # SSM state [..., B, H, P, N]
+            dp = batch_pspec(mesh, s.shape[nd - 4])
+            h_ax = resolve_axis(s.shape[nd - 3], "model", mesh)
+            return P(*([None] * (nd - 4)), dp, h_ax, None, None)
+        if path == "conv":    # [..., B, K-1, C]
+            dp = batch_pspec(mesh, s.shape[nd - 3])
+            return P(*([None] * (nd - 3)), dp, None, None)
+        return P()
+
+    return {k: NamedSharding(mesh, leaf_spec(k, v))
+            for k, v in cache_shapes.items()}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, model: Model):
+    """(cache, tokens, position) abstract values + shardings for decode."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = batch_pspec(mesh, B)
+    cache_shapes = model.init_cache(B, S)
+    cache_sh = cache_shardings(cfg, cache_shapes, mesh)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    position = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return (
+        (cache_shapes, tokens, position),
+        (cache_sh, NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp))),
+    )

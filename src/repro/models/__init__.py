@@ -1,0 +1,5 @@
+"""Model substrate: the 10 assigned architectures as pure-JAX modules."""
+
+from .model import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked scan formulation.
+
+Implements the SSD block algorithm [arXiv:2405.21060]: within a chunk the
+quadratic dual form (attention-like einsums, MXU-friendly); across chunks
+a linear recurrence over the [H, P, N] state carried by lax.scan.  A is
+scalar-per-head (Mamba2's simplification); B/C are shared across heads
+(one group).  Includes the depthwise causal conv frontend and the
+single-token decode step used by serving (constant-size state cache —
+this is what lets the ssm/hybrid archs run the long_500k shape).
+
+Heads shard over the `model` axis; B/C (state-dim) replicate.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .sharding import ParamSpec, constrain
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, K = cfg.ssm_heads, cfg.conv_kernel
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wC": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wdt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((K, di), ("conv", "ssm_inner"), scale=0.1),
+        "conv_B": ParamSpec((K, n), ("conv", "ssm_state"), scale=0.1),
+        "conv_C": ParamSpec((K, n), ("conv", "ssm_state"), scale=0.1),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),  # A = -exp(.)
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel K unrolled: y_t = sum_j w_j x_{t-K+1+j}."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        out = out + pad[:, j : j + S, :] * w[j]
+    return out
+
+
+class SSMState(NamedTuple):
+    """Decode-time cache: recurrent state + conv tail (constant size)."""
+
+    s: jax.Array       # [B, H, P, N] recurrent state
+    conv: jax.Array    # [B, K-1, di + 2n] conv input tail
+
+
+def ssd_scan(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]  (post-softplus)
+    A: jax.Array,      # [H]        (negative reals)
+    B: jax.Array,      # [B, S, N]
+    C: jax.Array,      # [B, S, N]
+    chunk: int,
+    s0: jax.Array = None,  # [B, H, P, N] initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y [B,S,H,P], final state [B,H,P,N])."""
+    b, s, h, p_ = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S_ = s + pad
+    nc = S_ // q
+    xc = x.reshape(b, nc, q, h, p_)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    da = dtc * A[None, None, None, :]                      # [b,c,q,h] (<= 0)
+    cum = jnp.cumsum(da, axis=2)                           # [b,c,q,h]
+
+    # intra-chunk (dual quadratic form): y_i += C_i.B_j dt_j decay(i,j) x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [b,c,i,j,h]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # [b,c,i,j]
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", scores, L, dtc, xc)
+
+    # per-chunk states: S_c = sum_j B_j dt_j decay(end, j) x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)           # [b,c,q,h]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, dtc * decay_end, xc)
+
+    # inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [b,c,h]
+    s_init = (jnp.zeros((b, h, p_, n), x.dtype)
+              if s0 is None else s0.astype(x.dtype))
+
+    def step(s_prev, inp):
+        st, dec = inp                                      # [b,h,p,n], [b,h]
+        s_next = s_prev * dec[:, :, None, None] + st
+        return s_next, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                  # [c,b,h,p,n]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)              # [c,b,h]
+    s_final, s_prefix = jax.lax.scan(step, s_init, (states_t, decay_t))
+    s_prefix = jnp.moveaxis(s_prefix, 0, 1)                # [b,c,h,p,n]
+
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", Cc, s_prefix, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, S_, h, p_)[:, :s]
+    return y.astype(x.dtype), s_final
+
+
+def mamba_block(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+    return_state: bool = False,
+):
+    """Full Mamba2 mixer over a sequence (training/prefill path).
+
+    With ``return_state`` also returns the decode-ready SSMState: the
+    final recurrent state from the chunked scan plus the conv tail (the
+    last K-1 *pre-conv* projected inputs) — what ``mamba_decode_step``
+    continues from.
+    """
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    K = cfg.conv_kernel
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xi0 = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bv0 = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cv0 = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    xi = jax.nn.silu(_causal_conv(xi0, p["conv_x"]))
+    Bv = jax.nn.silu(_causal_conv(Bv0, p["conv_B"]))
+    Cv = jax.nn.silu(_causal_conv(Cv0, p["conv_C"]))
+    xi = constrain(xi, "batch", "seq", "ssm_inner")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(*xi.shape[:2], h, hd)
+    y, s_final = ssd_scan(
+        xh.astype(jnp.float32), dt, A,
+        Bv.astype(jnp.float32), Cv.astype(jnp.float32), cfg.ssm_chunk,
+    )
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xi.shape[:2], di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    from .layers import rmsnorm
+    y = rmsnorm(y, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    out = constrain(out, "batch", "seq", "embed")
+    if not return_state:
+        return out
+    # conv tail: last K-1 raw (pre-conv) projected inputs, left-padded
+    # with zeros when the prompt is shorter than the kernel
+    cat = jnp.concatenate([xi0, Bv0, Cv0], axis=-1)       # [B, S, di+2n]
+    cat = jnp.pad(cat, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):, :]
+    state = SSMState(s=s_final.astype(jnp.float32), conv=cat.astype(jnp.float32))
+    return out, state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    di, n = cfg.d_inner, cfg.ssm_state
+    return SSMState(
+        s=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), dtype),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, di + 2 * n), dtype),
+    )
+
+
+def mamba_decode_step(
+    p: Dict[str, jax.Array], x: jax.Array, state: SSMState, cfg: ModelConfig
+) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode: O(1) state update (x: [B, 1, d])."""
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.conv_kernel
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])[:, 0]
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"])[:, 0]
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["wB"])[:, 0]
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["wC"])[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"])[:, 0].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                       # [B, H]
+
+    # conv over the cached tail + this step
+    cat = jnp.concatenate([xi, Bv, Cv], axis=-1)            # [B, di+2n]
+    window = jnp.concatenate([state.conv, cat[:, None, :]], axis=1)  # [B,K,*]
+    wfull = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=1)
+    conv_out = jnp.einsum("bkf,kf->bf", window, wfull)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bv, Cv = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # [H]
+    xh = xi.reshape(-1, h, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                 # [B, H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bv.astype(jnp.float32))
+    s_new = state.s * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, Cv.astype(jnp.float32))
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype) * jax.nn.silu(z)
+    from .layers import rmsnorm
+    y = rmsnorm(y, p["norm"])
+    out = jnp.einsum("be,ed->bd", y, p["wo"])[:, None, :]
+    return out, SSMState(s=s_new, conv=window[:, 1:, :])

@@ -1,0 +1,649 @@
+"""Model assembly: param specs + train/decode apply fns for all families.
+
+``build_model(cfg)`` returns a ``Model`` bundle:
+  * ``specs``        — pytree of ParamSpec (shapes + logical sharding axes)
+  * ``loss_fn``      — (params, batch) -> (loss, metrics); batch provides
+                       tokens/labels (+ ``prefix`` embeddings for vlm/audio)
+  * ``prefill_fn``   — (params, batch) -> (logits_last, cache)
+  * ``decode_fn``    — (params, cache, tokens, position) -> (logits, cache)
+  * ``init_cache``   — abstract cache spec for a (batch, max_seq) shape
+
+Layers run under jax.lax.scan over stacked parameters (compile-time O(1)
+in depth) with jax.checkpoint (remat) per layer — required for the 61-layer
+trillion-parameter dry-run to both compile quickly and fit HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .mamba import (SSMState, mamba_block, mamba_decode_step, mamba_init_state,
+                    mamba_specs)
+from .moe import moe_block, moe_specs
+from .sharding import ParamSpec, constrain
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    specs: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache: Callable
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    V = cfg.padded_vocab  # §Perf H3: pad so the vocab dim TP-shards
+    out = {
+        "embed": ParamSpec((V, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((V, cfg.d_model), ("vocab", "embed"))
+    return out
+
+
+def _embed(params, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _unembed_matrix(params) -> jax.Array:
+    return params.get("unembed", params["embed"])
+
+
+def _lm_loss(params, hidden: jax.Array, labels: jax.Array, cfg: ModelConfig):
+    """Chunked cross-entropy: never materializes [B, S, V] for the full S.
+
+    labels < 0 are masked (the VLM prefix, padding).  Vocab stays sharded
+    over `model`; the logsumexp reduction becomes a psum under GSPMD.
+    """
+    B, S, d = hidden.shape
+    W = _unembed_matrix(params)
+    c = min(cfg.logits_chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // c
+    hs = hidden.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, lab):
+        logits = jnp.einsum("bcd,vd->bcv", h, W).astype(jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        if W.shape[0] > cfg.vocab:  # mask padded vocab rows out of the CE
+            pad_mask = jnp.arange(W.shape[0]) >= cfg.vocab
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        return ((logz - ll) * valid).sum(), valid.sum()
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h, lab = inp
+        t, n = chunk_loss(h, lab)
+        return (tot + t, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _last_logits(params, hidden: jax.Array, cfg: Optional[ModelConfig] = None
+                 ) -> jax.Array:
+    W = _unembed_matrix(params)
+    logits = jnp.einsum("bd,vd->bv", hidden[:, -1, :], W).astype(jnp.float32)
+    if cfg is not None and W.shape[0] > cfg.vocab:
+        pad_mask = jnp.arange(W.shape[0]) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    return constrain(logits, "batch", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# decoder-only transformer (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    specs = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_specs(cfg),
+    }
+    specs["ffn"] = moe_specs(cfg) if cfg.family == "moe" else L.mlp_specs(cfg)
+    return specs
+
+
+def _decoder_specs(cfg: ModelConfig):
+    return {
+        **_embed_specs(cfg),
+        "layers": _stack_specs_tree(_layer_specs(cfg), cfg.n_layers),
+    }
+
+
+def _stack_specs_tree(tree, n: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n, *s.shape), logical=("layers", *s.logical)
+        ),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _decoder_layer(lp, x, cfg: ModelConfig, positions):
+    h = L.attention(lp["attn"], L.rmsnorm(x, lp["ln1"]), cfg, positions)
+    x = x + h
+    if cfg.family == "moe":
+        f, aux = moe_block(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+    else:
+        f, aux = L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg), 0.0
+    return x + f, aux
+
+
+def _decoder_hidden(params, x, cfg: ModelConfig, positions):
+    layer = _decoder_layer
+    if cfg.remat:
+        layer = jax.checkpoint(layer, static_argnums=(2,))
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x, aux = carry
+            x2, a = layer(lp, x, cfg, positions)
+            return (x2, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    else:
+        aux = 0.0
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, a = layer(lp, x, cfg, positions)
+            aux = aux + a
+    return L.rmsnorm(x, params["final_norm"]), aux
+
+
+def _tokens_to_hidden(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = _embed(params, tokens)
+    if cfg.frontend != "none" and "prefix" in batch:
+        prefix = batch["prefix"].astype(x.dtype)
+        prefix = constrain(prefix, "batch", "prefix", "embed")
+        x = jnp.concatenate([prefix, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    return _decoder_hidden(params, x, cfg, positions)
+
+
+def _decoder_loss(params, batch, cfg: ModelConfig):
+    hidden, aux = _tokens_to_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend != "none" and "prefix" in batch:
+        npf = batch["prefix"].shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], npf), -1, labels.dtype), labels], axis=1
+        )
+    ce = _lm_loss(params, hidden, labels, cfg)
+    metrics = {"ce": ce, "aux": aux}
+    return ce + 0.01 * aux, metrics
+
+
+# -- caches -----------------------------------------------------------------
+
+def _decoder_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, batch, max_seq, KV, Dh), jnp.bfloat16)
+    return {"k": kv, "v": kv}
+
+
+def _decoder_prefill(params, batch, cfg: ModelConfig, max_seq: int):
+    """Run the prompt through the stack, returning (last_logits, cache)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens)
+    if cfg.frontend != "none" and "prefix" in batch:
+        prefix = batch["prefix"].astype(x.dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        xn = L.rmsnorm(x, lp["ln1"])
+        q, k, v = L.qkv_project(lp["attn"], xn, cfg, positions)
+        ke = L._expand_kv(k, cfg.n_heads)
+        ve = L._expand_kv(v, cfg.n_heads)
+        o = L.chunked_attention(q, ke, ve, causal=True, chunk=cfg.attn_chunk)
+        o = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = x + o
+        if cfg.family == "moe":
+            f, _ = moe_block(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        else:
+            f = L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        x = x + f
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", None)
+        return x, {"k": kc, "v": vc}
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), cache
+
+
+def _decoder_decode(params, cache, tokens, position, cfg: ModelConfig):
+    """One decode step for the whole batch (tokens: [B, 1])."""
+    x = _embed(params, tokens)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        xn = L.rmsnorm(x, lp["ln1"])
+        o, ck, cv = L.decode_attention(lp["attn"], xn, cfg, ck, cv, position)
+        x = x + o
+        if cfg.family == "moe":
+            f, _ = moe_block(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        else:
+            f = L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        return x + f, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2) and hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+def _ssm_specs(cfg: ModelConfig):
+    block = {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mixer": mamba_specs(cfg),
+    }
+    return {**_embed_specs(cfg), "layers": _stack_specs_tree(block, cfg.n_layers)}
+
+
+def _ssm_hidden(params, x, cfg: ModelConfig):
+    def body(x, lp):
+        x = x + mamba_block(lp["mixer"], L.rmsnorm(x, lp["ln"]), cfg)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(x, params["final_norm"]), 0.0
+
+
+def _ssm_loss(params, batch, cfg: ModelConfig):
+    x = _embed(params, batch["tokens"])
+    hidden, _ = _ssm_hidden(params, x, cfg)
+    ce = _lm_loss(params, hidden, batch["labels"], cfg)
+    return ce, {"ce": ce}
+
+
+def _ssm_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    del max_seq  # constant-size state: the point of SSMs
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "s": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.conv_kernel - 1, di + 2 * n), jnp.float32),
+    }
+
+
+def _ssm_prefill(params, batch, cfg: ModelConfig, max_seq: int):
+    # Prefill = full forward, carrying out each layer's final SSM state
+    # (the ssd chunk scan produces it for free) + conv tail for decode.
+    x = _embed(params, batch["tokens"])
+
+    def body(carry, lp):
+        x = carry
+        xn = L.rmsnorm(x, lp["ln"])
+        y, st = mamba_block(lp["mixer"], xn, cfg, return_state=True)
+        return x + y, {"s": st.s, "conv": st.conv}
+
+    bodyf = jax.checkpoint(body) if cfg.remat else body
+    x, cache = jax.lax.scan(bodyf, x, params["layers"])
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), cache
+
+
+def _ssm_decode(params, cache, tokens, position, cfg: ModelConfig):
+    x = _embed(params, tokens)
+
+    def body(x, inp):
+        lp, s, conv = inp
+        xn = L.rmsnorm(x, lp["ln"])
+        y, st = mamba_decode_step(lp["mixer"], xn, SSMState(s, conv), cfg)
+        return x + y, {"s": st.s, "conv": st.conv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["s"], cache["conv"]))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), new_cache
+
+
+# -- hybrid (zamba2): groups of SSM layers + one SHARED attention block ------
+
+def _hybrid_specs(cfg: ModelConfig):
+    assert cfg.n_layers % cfg.attn_every == 0
+    groups = cfg.n_layers // cfg.attn_every
+    ssm_block = {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mixer": mamba_specs(cfg),
+    }
+    stacked = _stack_specs_tree(_stack_specs_tree(ssm_block, cfg.attn_every), groups)
+    return {
+        **_embed_specs(cfg),
+        "layers": stacked,                       # [groups, attn_every, ...]
+        "shared_attn": {
+            "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attn_specs(cfg),
+            "ffn": L.mlp_specs(cfg),
+        },
+    }
+
+
+def _hybrid_hidden(params, x, cfg: ModelConfig, positions):
+    shared = params["shared_attn"]
+
+    def group(x, gp):
+        for i in range(cfg.attn_every):
+            lp = jax.tree.map(lambda p: p[i], gp)
+            x = x + mamba_block(lp["mixer"], L.rmsnorm(x, lp["ln"]), cfg)
+        # shared attention block closes the group
+        h = L.attention(shared["attn"], L.rmsnorm(x, shared["ln1"]), cfg, positions)
+        x = x + h
+        x = x + L.mlp(shared["ffn"], L.rmsnorm(x, shared["ln2"]), cfg)
+        return x, None
+
+    groupf = jax.checkpoint(group) if cfg.remat else group
+    x, _ = jax.lax.scan(groupf, x, params["layers"])
+    return L.rmsnorm(x, params["final_norm"]), 0.0
+
+
+def _hybrid_loss(params, batch, cfg: ModelConfig):
+    x = _embed(params, batch["tokens"])
+    S = x.shape[1]
+    hidden, _ = _hybrid_hidden(params, x, cfg, jnp.arange(S)[None, :])
+    ce = _lm_loss(params, hidden, batch["labels"], cfg)
+    return ce, {"ce": ce}
+
+
+def _hybrid_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    groups = cfg.n_layers // cfg.attn_every
+    di, n = cfg.d_inner, cfg.ssm_state
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "s": jax.ShapeDtypeStruct(
+            (groups, cfg.attn_every, batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+            jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (groups, cfg.attn_every, batch, cfg.conv_kernel - 1, di + 2 * n),
+            jnp.float32),
+        "k": jax.ShapeDtypeStruct((groups, batch, max_seq, KV, Dh), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((groups, batch, max_seq, KV, Dh), jnp.bfloat16),
+    }
+
+
+def _hybrid_prefill(params, batch, cfg: ModelConfig, max_seq: int):
+    x = _embed(params, batch["tokens"])
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    shared = params["shared_attn"]
+
+    def group(x, gp):
+        ss, convs = [], []
+        for i in range(cfg.attn_every):
+            lp = jax.tree.map(lambda p: p[i], gp)
+            y, st = mamba_block(lp["mixer"], L.rmsnorm(x, lp["ln"]), cfg,
+                                return_state=True)
+            x = x + y
+            ss.append(st.s)
+            convs.append(st.conv)
+        xn = L.rmsnorm(x, shared["ln1"])
+        q, k, v = L.qkv_project(shared["attn"], xn, cfg, positions)
+        ke = L._expand_kv(k, cfg.n_heads)
+        ve = L._expand_kv(v, cfg.n_heads)
+        o = L.chunked_attention(q, ke, ve, causal=True, chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"])
+        x = x + L.mlp(shared["ffn"], L.rmsnorm(x, shared["ln2"]), cfg)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        kc = constrain(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, "batch", "kv_seq", "kv_heads", None)
+        return x, {"k": kc, "v": vc, "s": jnp.stack(ss),
+                   "conv": jnp.stack(convs)}
+
+    groupf = jax.checkpoint(group) if cfg.remat else group
+    x, cache = jax.lax.scan(groupf, x, params["layers"])
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), cache
+
+
+def _hybrid_decode(params, cache, tokens, position, cfg: ModelConfig):
+    x = _embed(params, tokens)
+    shared = params["shared_attn"]
+
+    def group(x, inp):
+        gp, s, conv, ck, cv = inp
+        new_s, new_conv = [], []
+        for i in range(cfg.attn_every):
+            lp = jax.tree.map(lambda p: p[i], gp)
+            xn = L.rmsnorm(x, lp["ln"])
+            y, st = mamba_decode_step(lp["mixer"], xn, SSMState(s[i], conv[i]), cfg)
+            x = x + y
+            new_s.append(st.s)
+            new_conv.append(st.conv)
+        xn = L.rmsnorm(x, shared["ln1"])
+        o, ck, cv = L.decode_attention(shared["attn"], xn, cfg, ck, cv, position)
+        x = x + o
+        x = x + L.mlp(shared["ffn"], L.rmsnorm(x, shared["ln2"]), cfg)
+        return x, {"s": jnp.stack(new_s), "conv": jnp.stack(new_conv),
+                   "k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(
+        group, x,
+        (params["layers"], cache["s"], cache["conv"], cache["k"], cache["v"]),
+    )
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _encdec_specs(cfg: ModelConfig):
+    enc_layer = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_specs(cfg),
+        "ffn": L.mlp_specs(cfg),
+    }
+    dec_layer = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln_x": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_specs(cfg),
+        "xattn": L.attn_specs(cfg),
+        "ffn": L.mlp_specs(cfg),
+    }
+    return {
+        **_embed_specs(cfg),
+        "enc_layers": _stack_specs_tree(enc_layer, cfg.n_enc_layers),
+        "enc_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "dec_layers": _stack_specs_tree(dec_layer, cfg.n_layers),
+    }
+
+
+def _encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = frames
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(x, lp):
+        h = L.attention(lp["attn"], L.rmsnorm(x, lp["ln1"]), cfg, positions,
+                        causal=False, use_rope=True)
+        x = x + h
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        return x, None
+
+    bodyf = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(bodyf, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_norm"])
+
+
+def _cross_attention(lp, x, memory, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = jnp.einsum("btd,dhk->bthk", memory, lp["wk"])
+    v = jnp.einsum("btd,dhk->bthk", memory, lp["wv"])
+    k = L._expand_kv(k, cfg.n_heads)
+    v = L._expand_kv(v, cfg.n_heads)
+    o = L.chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+
+
+def _encdec_loss(params, batch, cfg: ModelConfig):
+    memory = _encode(params, batch["prefix"].astype(jnp.bfloat16), cfg)
+    x = _embed(params, batch["tokens"])
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        h = L.attention(lp["attn"], L.rmsnorm(x, lp["ln1"]), cfg, positions)
+        x = x + h
+        x = x + _cross_attention(lp["xattn"], L.rmsnorm(x, lp["ln_x"]), memory, cfg)
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        return x, None
+
+    bodyf = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(bodyf, x, params["dec_layers"])
+    hidden = L.rmsnorm(x, params["final_norm"])
+    ce = _lm_loss(params, hidden, batch["labels"], cfg)
+    return ce, {"ce": ce}
+
+
+def _encdec_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    Ld = cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, max_seq, KV, Dh), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((Ld, batch, max_seq, KV, Dh), jnp.bfloat16),
+        # cross-attention K/V precomputed from the encoder memory
+        "xk": jax.ShapeDtypeStruct((Ld, batch, cfg.n_prefix, KV, Dh), jnp.bfloat16),
+        "xv": jax.ShapeDtypeStruct((Ld, batch, cfg.n_prefix, KV, Dh), jnp.bfloat16),
+    }
+
+
+def _encdec_prefill(params, batch, cfg: ModelConfig, max_seq: int):
+    memory = _encode(params, batch["prefix"].astype(jnp.bfloat16), cfg)
+    x = _embed(params, batch["tokens"])
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        xn = L.rmsnorm(x, lp["ln1"])
+        q, k, v = L.qkv_project(lp["attn"], xn, cfg, positions)
+        o = L.chunked_attention(
+            q, L._expand_kv(k, cfg.n_heads), L._expand_kv(v, cfg.n_heads),
+            causal=True, chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = x + _cross_attention(lp["xattn"], L.rmsnorm(x, lp["ln_x"]), memory, cfg)
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        xk = jnp.einsum("btd,dhk->bthk", memory, lp["xattn"]["wk"]).astype(jnp.bfloat16)
+        xv = jnp.einsum("btd,dhk->bthk", memory, lp["xattn"]["wv"]).astype(jnp.bfloat16)
+        return x, {"k": kc, "v": vc, "xk": xk, "xv": xv}
+
+    bodyf = jax.checkpoint(body) if cfg.remat else body
+    x, cache = jax.lax.scan(bodyf, x, params["dec_layers"])
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), cache
+
+
+def _encdec_decode(params, cache, tokens, position, cfg: ModelConfig):
+    x = _embed(params, tokens)
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        xn = L.rmsnorm(x, lp["ln1"])
+        o, ck, cv = L.decode_attention(lp["attn"], xn, cfg, ck, cv, position)
+        x = x + o
+        # cross-attention over the (static) encoder memory
+        xq = jnp.einsum("bsd,dhk->bshk", L.rmsnorm(x, lp["ln_x"]), lp["xattn"]["wq"])
+        keys = L._expand_kv(xk, cfg.n_heads)
+        vals = L._expand_kv(xv, cfg.n_heads)
+        s = jnp.einsum("bohk,bthk->bhot", xq, keys) * (cfg.resolved_head_dim ** -0.5)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(vals.dtype)
+        xo = jnp.einsum("bhot,bthk->bohk", w, vals)
+        x = x + jnp.einsum("bohk,hkd->bod", xo, lp["xattn"]["wo"])
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+        return x, {"k": ck, "v": cv, "xk": xk, "xv": xv}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    hidden = L.rmsnorm(x, params["final_norm"])
+    return _last_logits(params, hidden, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        specs = _decoder_specs(cfg)
+        return Model(
+            cfg, specs,
+            loss_fn=functools.partial(_decoder_loss, cfg=cfg),
+            prefill_fn=lambda p, b, max_seq: _decoder_prefill(p, b, cfg, max_seq),
+            decode_fn=lambda p, c, t, pos: _decoder_decode(p, c, t, pos, cfg),
+            init_cache=lambda batch, max_seq: _decoder_cache_shapes(cfg, batch, max_seq),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg, _ssm_specs(cfg),
+            loss_fn=functools.partial(_ssm_loss, cfg=cfg),
+            prefill_fn=lambda p, b, max_seq: _ssm_prefill(p, b, cfg, max_seq),
+            decode_fn=lambda p, c, t, pos: _ssm_decode(p, c, t, pos, cfg),
+            init_cache=lambda batch, max_seq: _ssm_cache_shapes(cfg, batch, max_seq),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg, _hybrid_specs(cfg),
+            loss_fn=functools.partial(_hybrid_loss, cfg=cfg),
+            prefill_fn=lambda p, b, max_seq: _hybrid_prefill(p, b, cfg, max_seq),
+            decode_fn=lambda p, c, t, pos: _hybrid_decode(p, c, t, pos, cfg),
+            init_cache=lambda batch, max_seq: _hybrid_cache_shapes(cfg, batch, max_seq),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg, _encdec_specs(cfg),
+            loss_fn=functools.partial(_encdec_loss, cfg=cfg),
+            prefill_fn=lambda p, b, max_seq: _encdec_prefill(p, b, cfg, max_seq),
+            decode_fn=lambda p, c, t, pos: _encdec_decode(p, c, t, pos, cfg),
+            init_cache=lambda batch, max_seq: _encdec_cache_shapes(cfg, batch, max_seq),
+        )
+    raise ValueError(f"unknown family {fam!r}")

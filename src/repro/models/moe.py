@@ -1,0 +1,222 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch.
+
+Sort-based dispatch (no [T, E] one-hot cumsum): slots are ranked within
+their expert via argsort + searchsorted, mapped to an [E, C, d] expert
+buffer with a scatter, and combined back with the routing weights.  This
+keeps HLO FLOPs ~= active-expert FLOPs (dense all-expert einsums would
+inflate compiled FLOPs ~E/k-fold — visible in the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio).
+
+Experts shard over the `model` mesh axis (EP); the dispatch scatter
+becomes an all-to-all under GSPMD.  Tokens beyond an expert's capacity
+C = ceil(T*k*cf/E) are dropped (standard dropping MoE) — the router's
+residual stream passes through unchanged for them.
+
+Beyond-paper tie-in (DESIGN.md §6.4): the router can apply the paper's
+top-k *boundary* trick — experts whose block-max routing logit across the
+batch cannot reach the running k-th logit are skipped during analysis;
+here it surfaces as the `router_boundary_stats` diagnostic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .sharding import ParamSpec, constrain
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    if cfg.moe_sharding == "resident":
+        # §Perf H1 iter 1: no FSDP dim on expert weights — they shard over
+        # (experts x d_ff) = (pod*data x model) and never move.
+        e_ax, d_ax, f_ax = "experts_resident", None, "moe_ff"
+    elif cfg.moe_sharding == "expert_only":
+        # §Perf H1 iter 3: experts over `model` ONLY.  No d-sharding means
+        # the grouped-dispatch einsums contract locally — GSPMD neither
+        # gathers weights nor all-reduces activation partials.  Per-device
+        # expert params = total/TP (kimi: 2.1 GB bf16 — resident is fine).
+        e_ax, d_ax, f_ax = "experts", None, None
+    else:
+        e_ax, d_ax, f_ax = "experts", "embed", None
+    return {
+        "router": ParamSpec((d, E), ("embed", "experts"), scale=0.01),
+        "wg": ParamSpec((E, d, f), (e_ax, d_ax, f_ax)),
+        "wu": ParamSpec((E, d, f), (e_ax, d_ax, f_ax)),
+        "wd": ParamSpec((E, f, d), (e_ax, f_ax, d_ax)),
+    }
+
+
+def moe_block(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,d], aux load-balancing loss scalar).
+
+    Long sequences are dispatched in chunks along S (scan): the gather/
+    scatter working set is O(B * moe_seq_chunk * d) instead of O(B * S * d)
+    — at (B=256, S=4096, d=7168) the unchunked buffers are terabytes.
+    The expert-weight all-gather is loop-invariant and hoisted by XLA.
+    """
+    B, S, d = x.shape
+    c = cfg.moe_seq_chunk
+    if S > c and S % c == 0:
+        nc = S // c
+        xs = x.reshape(B, nc, c, d).transpose(1, 0, 2, 3)  # [nc, B, c, d]
+
+        def body(aux, xc):
+            y, a = _moe_dispatch(p, xc, cfg)
+            return aux + a, y
+
+        aux, ys = jax.lax.scan(body, 0.0, xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+        return y, aux / nc
+    return _moe_dispatch(p, x, cfg)
+
+
+def _moe_grouped(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """§Perf H1 (iteration 2): batch-local dispatch.
+
+    Routing, ranking and the dispatch scatter all happen PER BATCH ROW
+    (vmapped), so every scatter touches only data resident on the row's
+    shard — no cross-device scatter, hence no dense all-reduce.  The
+    [B, E, C_b, d] buffer is sharded (batch x experts) and expert FFNs run
+    on local (B-shard x E-shard) tiles.  Capacity is per row:
+    C_b = ceil(S*k*cf/E).
+    """
+    B, S, d = x.shape
+    k, E = cfg.experts_per_tok, cfg.n_experts
+    C = max(int(math.ceil(S * k * cfg.capacity_factor / E)), 1)
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                      # [B, S, k]
+    w = (w / w.sum(-1, keepdims=True)).astype(x.dtype)
+
+    flat_e = constrain(idx.reshape(B, S * k), "batch", None)
+    order = constrain(jnp.argsort(flat_e, axis=1), "batch", None)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+
+    # rank within (row, expert) via a cumsum over a one-hot-free compare:
+    # rank[i] = i - first-position-of(sorted_e[i]) — searchsorted per row
+    def row_rank(se):
+        return jnp.arange(S * k) - jnp.searchsorted(se, se, side="left")
+
+    rank = jax.vmap(row_rank)(sorted_e)
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)    # [B, S*k]
+    dest = constrain(dest, "batch", None)
+    tok = order // k
+
+    # every [B, S*k, d] intermediate must stay batch-sharded: without the
+    # explicit constraints GSPMD gives up on the vmapped gather/scatter
+    # and ALL-GATHERS the full batch (measured: 4 GiB x2 per layer, §Perf
+    # H1 iter 4)
+    gathered = jnp.take_along_axis(x, tok[..., None], axis=1)
+    gathered = gathered * keep[..., None].astype(x.dtype)
+    gathered = constrain(gathered, "batch", None, None)
+
+    def row_scatter(g, dst):
+        return jnp.zeros((E * C + 1, d), x.dtype).at[dst].set(g)
+
+    buf = jax.vmap(row_scatter)(gathered, dest)           # [B, E*C+1, d]
+    buf = constrain(buf, "batch", None, None)
+    xe = constrain(buf[:, :-1].reshape(B, E, C, d), "batch", "experts",
+                   None, None)
+
+    act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+    h = act(jnp.einsum("becd,edf->becf", xe, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["wu"])
+    h = constrain(h, "batch", "experts", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"]).reshape(B, E * C, d)
+    ye = constrain(ye, "batch", None, None)
+    ye = jnp.concatenate([ye, jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+
+    y_sorted = jnp.take_along_axis(ye, dest[..., None], axis=1)
+    y_sorted = constrain(y_sorted, "batch", None, None)
+
+    def row_unscatter(ys, o):
+        return jnp.zeros((S * k, d), ys.dtype).at[o].set(ys)
+
+    y_slots = constrain(jax.vmap(row_unscatter)(y_sorted, order),
+                        "batch", None, None)
+    y = (y_slots.reshape(B, S, k, d) * w[..., None]).sum(axis=2)
+
+    me = probs.reshape(B * S, E).mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e.reshape(-1)].add(1.0) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def _moe_dispatch(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_dispatch == "grouped":
+        return _moe_grouped(p, x, cfg)
+    B, S, d = x.shape
+    T = B * S
+    k, E = cfg.experts_per_tok, cfg.n_experts
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                      # [T, k]
+    w = (w / w.sum(-1, keepdims=True)).astype(x.dtype)
+
+    # --- capacity-based dispatch (sort + rank) ---
+    C = max(int(math.ceil(T * k * cfg.capacity_factor / E)), 1)
+    flat_e = idx.reshape(-1)                              # [T*k]
+    order = jnp.argsort(flat_e)                           # stable
+    sorted_e = flat_e[order]
+    rank = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)    # E*C = trash slot
+    tok = order // k
+
+    e_ax = "experts_resident" if cfg.moe_sharding == "resident" else "experts"
+    f_ax = "moe_ff" if cfg.moe_sharding == "resident" else None
+    gathered = xt[tok] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(gathered)
+    xe = constrain(buf[:-1].reshape(E, C, d), e_ax, None, None)
+
+    # --- expert FFNs (EP; resident mode adds TP over d_ff) ---
+    act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wu"]
+    )
+    h = constrain(h, e_ax, None, f_ax)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(E * C, d)
+
+    # --- combine ---
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    y_sorted = ye[dest]                                   # [T*k, d]
+    y_slots = jnp.zeros((T * k, d), ye.dtype).at[order].set(y_sorted)
+    y = (y_slots.reshape(T, k, d) * w[..., None]).sum(axis=1)
+
+    # Switch-style load-balance aux: E * sum_e mean_prob_e * frac_routed_e
+    me = probs.mean(axis=0)                               # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux
+
+
+def router_boundary_stats(logits: jax.Array, k: int, block: int = 256) -> jax.Array:
+    """Diagnostic: fraction of router-logit blocks skippable by the paper's
+    top-k boundary rule (block max <= running k-th).  Used by benchmarks
+    to quantify the Sec. 5 -> MoE transfer; not on the training path."""
+    T, E = logits.shape
+    nb = T // block
+    lb = logits[: nb * block].reshape(nb, block, E)
+    bmax = lb.max(axis=1)                                 # [nb, E]
+    kth = jax.lax.top_k(logits, k)[0][:, -1]              # [T]
+    kth_blocks = kth[: nb * block].reshape(nb, block).max(axis=1)
+    return (bmax <= kth_blocks[:, None]).mean()

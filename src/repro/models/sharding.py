@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (MaxText-style) + the ParamSpec system.
+
+Every parameter is declared as a ``ParamSpec(shape, logical_axes)``;
+logical axes are resolved to mesh axes through a rule table, with
+*divisibility resolution*: a logical axis whose dimension does not divide
+the mesh axis size falls back to replication (e.g. GLM-4's 2 KV heads on
+16-way TP).  This keeps every (arch x mesh) combination lowerable without
+per-arch special-casing — the property the multi-pod dry-run checks.
+
+Parallelism mapping (DESIGN.md §4):
+  batch   -> (pod, data)   data parallelism, hierarchical across pods
+  fsdp    -> data           parameter/optimizer sharding (ZeRO-3 style)
+  model   -> model          tensor parallelism: heads / mlp / experts / vocab
+  kv_seq  -> model           context parallelism for decode KV caches when
+                             kv_heads cannot use the model axis
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis name(s) (None = replicated)
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",          # weight sharding along the data axis
+    "embed": None,           # d_model
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    # 'resident' MoE sharding (§Perf H1): experts over the DP axes, expert
+    # d_ff over model — weights stay put, tokens all-to-all to them.
+    "experts_resident": ("pod", "data"),
+    "moe_ff": "model",
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "seq": None,
+    "kv_seq": None,          # flipped to 'model' for context-parallel decode
+    "layers": None,          # stacked scan-over-layers axis
+    "head_dim": None,
+    "prefix": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[str, ...]
+    init: str = "normal"       # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return int(mesh.shape.get(axis, 1))
+
+
+def resolve_axis(dim: int, axis, mesh: Mesh):
+    """Divisibility resolution: replicate when the dim doesn't divide."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        axis = tuple(a for a in axis if a in mesh.shape)
+        if not axis:
+            return None
+        size = mesh_axis_size(mesh, axis)
+        if size > 1 and dim % size == 0:
+            return axis if len(axis) > 1 else axis[0]
+        # try the largest prefix that divides
+        for end in range(len(axis) - 1, 0, -1):
+            sub = axis[:end]
+            if dim % mesh_axis_size(mesh, sub) == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    if axis not in mesh.shape:
+        return None
+    size = mesh.shape[axis]
+    return axis if (size > 1 and dim % size == 0) else None
+
+
+def logical_to_pspec(
+    logical: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Any]] = None,
+) -> P:
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axis = resolve_axis(dim, rules.get(name), mesh)
+        # a mesh axis may appear only once in a PartitionSpec
+        flat = axis if isinstance(axis, tuple) else (axis,) if axis else ()
+        if any(a in used for a in flat):
+            axis = None
+        for a in flat:
+            used.add(a)
+        out.append(axis)
+    return P(*out)
+
+
+def spec_sharding(spec: ParamSpec, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(spec.logical, spec.shape, mesh, rules))
+
+
+def tree_shardings(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: spec_sharding(s, mesh, rules),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def tree_abstract(specs):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize parameters on the current device(s)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = spec.scale if spec.init == "normal" else 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(k, spec.shape, jnp.float32)).astype(spec.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+_CURRENT_MESH: Optional[Mesh] = None
+_CURRENT_RULES: Optional[Dict[str, Any]] = None
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Activation sharding constraint by logical axes.
+
+    No-op when no mesh is active (single-device smoke tests) so model code
+    can sprinkle constraints unconditionally.
+    """
+    mesh = _CURRENT_MESH
+    if mesh is None or mesh.size == 1:
+        return x
+    pspec = logical_to_pspec(
+        tuple(l if l is not None else "_replicated" for l in logical),
+        x.shape, mesh, _CURRENT_RULES,
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+class use_mesh:
+    """Activate a mesh (+ optional rule overrides) for `constrain`."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Any]] = None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        global _CURRENT_MESH, _CURRENT_RULES
+        self._prev = (_CURRENT_MESH, _CURRENT_RULES)
+        _CURRENT_MESH = self.mesh
+        _CURRENT_RULES = self.rules
+        return self.mesh
+
+    def __exit__(self, *exc):
+        global _CURRENT_MESH, _CURRENT_RULES
+        _CURRENT_MESH, _CURRENT_RULES = self._prev
+        return False

@@ -1,0 +1,123 @@
+"""Continuous batching: slot-based serving with per-request decode depth.
+
+Production serving never waits for a whole batch of equal-length prompts:
+requests are admitted into SLOTS as they arrive, every decode step
+advances all active slots (each at its own position — the per-request
+scatter in layers.decode_attention), and finished slots are recycled
+immediately.  This is the vLLM-style scheduling loop at the granularity
+this framework models (slot = contiguous KV region; paging within a slot
+is an orthogonal extension noted in DESIGN.md).
+
+Host-side control, device-side state: the slot caches live as one batched
+pytree (donated through the jitted decode step); prefill inserts a single
+request's K/V into its slot with a jitted writer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # prompt
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, n_slots: int = 4,
+                 max_seq: int = 128, eos_id: Optional[int] = None):
+        if model.cfg.family in ("ssm", "hybrid", "encdec", "vlm"):
+            raise NotImplementedError(
+                "slot-insert prefill is implemented for decoder-only LMs")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        cfg = model.cfg
+        shapes = model.init_cache(n_slots, max_seq)
+        self.cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+        self.positions = np.zeros(n_slots, dtype=np.int32)
+        self.last_tok = np.zeros(n_slots, dtype=np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._rid = 0
+
+        self._decode = jax.jit(model.decode_fn, donate_argnums=(1,))
+        self._prefill1 = jax.jit(
+            lambda p, b: model.prefill_fn(p, b, max_seq))
+
+        def write_slot(cache, kv, slot):
+            # kv: per-layer [L, 1, S, KV, D] from a single-request prefill
+            return jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=1),
+                cache, kv)
+
+        self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+
+    # -- API ----------------------------------------------------------------
+
+    def submit(self, tokens: np.ndarray, max_new: int = 16) -> int:
+        req = Request(self._rid, np.asarray(tokens, np.int32), max_new)
+        self._rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive until queue + slots drain; returns rid -> generated ids."""
+        while self.queue or self.active():
+            self._admit()
+            self._step()
+        return {rid: r.out for rid, r in self.finished.items()}
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            logits, kv = self._prefill1(
+                self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
+            self.cache = self._write_slot(self.cache, kv, slot)
+            self.slot_req[slot] = req
+            self.positions[slot] = len(req.tokens)
+            self.last_tok[slot] = int(jnp.argmax(logits[0]))
+            req.out.append(int(self.last_tok[slot]))
+
+    def _step(self) -> None:
+        if not self.active():
+            return
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.positions)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.positions[slot] += 1
+            tok = int(nxt[slot])
+            self.last_tok[slot] = tok
+            req.out.append(tok)
+            full = self.positions[slot] + 1 >= self.max_seq
+            if len(req.out) >= req.max_new or tok == self.eos_id or full:
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[slot] = None
+                self.positions[slot] = 0

@@ -1,0 +1,61 @@
+"""Batched serving: prefill + decode loop with greedy/temperature sampling.
+
+``Generator`` jit-compiles the model's prefill and decode steps once and
+drives them from the host: prefill the prompt batch, then step the decode
+function with donated caches.  This is the ``serve_step`` the decode_* dry
+-run shapes lower, exercised for real by the CPU-scale examples and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Generator:
+    model: Model
+    params: object
+    max_seq: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill_fn(p, b, self.max_seq))
+        self._decode = jax.jit(
+            self.model.decode_fn, donate_argnums=(1,))
+
+    def generate(
+        self,
+        tokens: np.ndarray,                 # [B, S] prompt
+        steps: int,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+        prefix: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        batch = {"tokens": jnp.asarray(tokens)}
+        if prefix is not None:
+            batch["prefix"] = jnp.asarray(prefix)
+        logits, cache = self._prefill(self.params, batch)
+        B, S = tokens.shape
+        pos0 = S + (prefix.shape[1] if prefix is not None
+                    and self.model.cfg.family == "vlm" else 0)
+        out = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(steps):
+            out.append(np.asarray(tok))
+            position = jnp.full((B,), pos0 + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok, position)
+            tok = self._sample(logits, temperature, key, i + 1)
+        return np.concatenate(out, axis=1)
+
+    def _sample(self, logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None]
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature)[:, None]

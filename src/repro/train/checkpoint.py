@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic commit.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     tree structure, shapes, dtypes, mesh
+                               fingerprint, step — written LAST
+             shard_<proc>.npz  this process's param/opt leaves
+
+Atomicity: everything is written into ``step_<N>.tmp`` and renamed after
+the manifest is in place; a crash mid-save can never leave a directory
+that ``latest_step`` would pick up.  Restore accepts a DIFFERENT mesh
+than the one that saved (elastic.py re-device_puts onto the new
+shardings), which is what turns a node failure into "reshard + resume"
+instead of "lose the run".
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot represent ml_dtypes (bfloat16 etc.): store as a same-width
+# integer view and record the true dtype in the manifest.
+_VIEW_FOR = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+             "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    view = _VIEW_FOR.get(str(arr.dtype))
+    return arr.view(view) if view is not None else arr
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_FOR:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, state, extra: Optional[dict] = None) -> str:
+    """Save a pytree state; returns the committed checkpoint path."""
+    tmp = os.path.join(directory, f"step_{step:08d}.tmp")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items() if v is not None}
+    np.savez(os.path.join(tmp, "shard_0.npz"),
+             **{k: _to_savable(v) for k, v in arrays.items()})
+
+    treedef = jax.tree.structure(state)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "treedef": str(treedef),
+        "n_processes": jax.process_count(),
+        "n_devices": jax.device_count(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like, shardings=None) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  With ``shardings``, leaves are device_put onto
+    them — the elastic-resume path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+
+    flat_like = _flatten_with_paths(like)
+    flat_sh = _flatten_with_paths(shardings) if shardings is not None else {}
+    out = {}
+    for key, leaf in flat_like.items():
+        if leaf is None:
+            out[key] = None
+            continue
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _from_savable(data[key], manifest["dtypes"][key])
+        expect = tuple(leaf.shape) if hasattr(leaf, "shape") else None
+        if expect is not None and tuple(arr.shape) != expect:
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs {expect}")
+        sh = flat_sh.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+
+    # rebuild the tree in `like`'s structure
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree.structure(like)
+    ordered = []
+    for pth, leaf in leaves_paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in pth
+        )
+        ordered.append(out[key])
+    return jax.tree.unflatten(treedef, ordered), manifest
+
+
+def restore_latest(directory: str, like, shardings=None):
+    step = latest_step(directory)
+    if step is None:
+        return None, None
+    state, manifest = restore(directory, step, like, shardings)
+    return state, manifest

@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression for the cross-pod hop.
+
+At 512+ chips the gradient all-reduce crosses the slow DCN between pods.
+Quantizing the cross-pod summand to int8 (per-tensor absmax scale) cuts
+those bytes 4x (vs f32 master grads; 2x vs bf16) at the cost of
+quantization noise, which *error feedback* (Karimireddy et al., 2019)
+re-injects next step so the optimizer sees an unbiased long-run signal.
+
+Two entry points:
+  * ``compress_grads``  — pytree-level quantize->dequantize with carried
+    error state; applied before the optimizer in train_step when enabled.
+    This simulates the wire format exactly and is what the convergence
+    test exercises.
+  * ``compressed_psum`` — the shard_map building block that performs the
+    actual quantized all-reduce over a named axis (used on real multi-pod
+    meshes; unit-tested on a host mesh).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (dequantized grads as seen after the wire, new error state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-quantized all-reduce over ``axis_name`` (inside shard_map).
+
+    Protocol: agree on a shared scale (max over the axis), send int8,
+    accumulate in int32, rescale.  Bytes on the wire: 1/axis of the
+    f32 volume + one scalar round.
+    """
+    local_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scale = jax.lax.pmax(local_scale, axis_name)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,81 @@
+"""Elastic scaling: re-mesh + state resharding after topology changes.
+
+Scenario at 1000+ nodes: a pod (or a slice of one) fails mid-run.  The
+job restarts on the surviving devices; ``plan_mesh`` builds the largest
+valid (data, model) mesh from what is left (model-parallel degree is
+preserved — TP re-sharding would change matmul partitioning — while the
+data axis absorbs the loss), and ``reshard`` device_puts the restored
+checkpoint onto the new shardings.  Data-parallel batch bookkeeping
+(`scale_batch`) keeps the *global* batch constant when possible by
+raising the per-replica microbatch count.
+
+Straggler mitigation lives in data/pipeline.py (deterministic work
+stealing over the pruned scan set); this module owns topology changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.sharding import tree_shardings
+
+
+def plan_mesh(
+    devices: Optional[Sequence] = None,
+    model_parallel: int = 16,
+    axis_names: Tuple[str, str] = ("data", "model"),
+) -> Mesh:
+    """Largest (data, model) mesh from the surviving devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    while model_parallel > 1 and (n % model_parallel or n < model_parallel):
+        model_parallel //= 2
+    data = n // model_parallel
+    usable = devices[: data * model_parallel]
+    import numpy as np
+    return Mesh(
+        np.array(usable).reshape(data, model_parallel), axis_names
+    )
+
+
+def reshard(state: Any, specs: Any, new_mesh: Mesh, rules=None) -> Any:
+    """device_put every leaf onto the new mesh's shardings.
+
+    ``specs`` is the ParamSpec tree for the params; optimizer-state leaves
+    reuse the matching param shardings (same logical axes).
+    """
+    from .train_step import TrainState
+
+    param_sh = tree_shardings(specs, new_mesh, rules)
+    if isinstance(state, TrainState):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return TrainState(
+            params=jax.device_put(state.params, param_sh),
+            opt=type(state.opt)(
+                step=jax.device_put(state.opt.step, NamedSharding(new_mesh, P())),
+                m=jax.device_put(state.opt.m, param_sh),
+                v=jax.device_put(state.opt.v, param_sh),
+            ),
+            error=None if state.error is None
+            else jax.device_put(state.error, param_sh),
+        )
+    return jax.device_put(state, param_sh)
+
+
+def scale_batch(global_batch: int, old_data: int, new_data: int,
+                microbatches: int) -> Tuple[int, int]:
+    """Keep the global batch when the data-parallel degree shrinks by
+    raising the microbatch count; otherwise shrink to the nearest valid.
+
+    Returns (global_batch, microbatches).
+    """
+    if new_data == old_data:
+        return global_batch, microbatches
+    if global_batch % new_data == 0:
+        factor = max(old_data // max(new_data, 1), 1)
+        return global_batch, microbatches * factor
+    per = max(global_batch // new_data, 1)
+    return per * new_data, microbatches

@@ -1,0 +1,98 @@
+"""AdamW with configurable state dtype + global-norm clipping.
+
+Hand-rolled (no optax dependency).  ``state_dtype='bfloat16'`` halves the
+optimizer-state HBM footprint — required for the 1T-parameter config to
+fit a 512-chip v5e slice (2B params + 2B m + 2B v = 6 bytes/param; fp32
+states would need 10).  Optimizer states inherit the parameters'
+(FSDP x TP) shardings, so the update is fully sharded elementwise work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]        # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def init_abstract(self, param_shapes) -> AdamWState:
+        """ShapeDtypeStruct state for the dry-run (no allocation)."""
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, self.state_dtype)
+        return AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(zeros, param_shapes),
+            v=jax.tree.map(zeros, param_shapes),
+        )
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m_new.astype(self.state_dtype), v_new.astype(self.state_dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        flat_p = jax.tree.leaves(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(peak: float, warmup: int = 100, total: int = 10_000,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr

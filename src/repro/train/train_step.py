@@ -1,0 +1,109 @@
+"""Training step: microbatched grad accumulation + optimizer update.
+
+The step function is pure (params, opt_state, batch) -> (params,
+opt_state, metrics) and jit-compiles under any mesh; sharding comes
+entirely from in_shardings/out_shardings at jit time (launch/dryrun.py,
+launch/train.py), so the same function serves the CPU examples and the
+512-chip dry-run.
+
+Microbatching: the global batch is reshaped to [n_micro, B/n_micro, ...]
+and scanned, accumulating f32 gradients.  On TPU the backward of
+microbatch i overlaps the gradient reduce-scatter of microbatch i-1 (XLA
+latency-hiding scheduler) — the compute/comm overlap trick at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .compress import compress_grads, init_error
+from .optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    error: Optional[Any] = None     # error-feedback state (compression)
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW,
+    microbatches: int = 1,
+    compress: bool = False,
+) -> Callable:
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        params = state.params
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                loss, _, g = grads_of(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+
+        new_error = state.error
+        if compress:
+            grads, new_error = compress_grads(grads, state.error)
+
+        new_params, new_opt = optimizer.update(grads, state.opt, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "lr": optimizer.lr(new_opt.step), **metrics}
+        return TrainState(new_params, new_opt, new_error), out_metrics
+
+    return step
+
+
+def init_state(model: Model, optimizer: AdamW, key, compress: bool = False
+               ) -> TrainState:
+    from ..models.sharding import init_params
+    params = init_params(model.specs, key)
+    return TrainState(
+        params=params,
+        opt=optimizer.init(params),
+        error=init_error(params) if compress else None,
+    )
+
+
+def abstract_state(model: Model, optimizer: AdamW, compress: bool = False
+                   ) -> TrainState:
+    """ShapeDtypeStruct state for AOT lowering (dry-run: no allocation)."""
+    from ..models.sharding import tree_abstract
+    shapes = tree_abstract(model.specs)
+    return TrainState(
+        params=shapes,
+        opt=optimizer.init_abstract(shapes),
+        error=jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), shapes
+        ) if compress else None,
+    )

@@ -1,0 +1,80 @@
+"""Shared test utilities: small table builders and hypothesis strategies."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core import expr as E
+from repro.data.table import Table
+
+STR_DOMAIN = [
+    "Alpine Chough", "Alpine Ibex", "Alpine Marmot", "Alpine Salamander",
+    "Bear", "Duck", "Eagle", "Frog", "Pike", "Wolf",
+]
+
+
+@st.composite
+def small_tables(draw, max_rows=120, max_part=8, with_nulls=True):
+    n = draw(st.integers(4, max_rows))
+    rows_per_part = draw(st.integers(2, max(2, n // 2)))
+    x = draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    y = draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n))
+    s_idx = draw(st.lists(st.integers(0, len(STR_DOMAIN) - 1), min_size=n, max_size=n))
+    sort_x = draw(st.booleans())
+    x = np.asarray(x, dtype=np.int64)
+    if sort_x:
+        x = np.sort(x)
+    nulls = {}
+    if with_nulls and draw(st.booleans()):
+        nm = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        nulls["x"] = np.asarray(nm, dtype=bool)
+    tbl = Table.build(
+        "t",
+        {
+            "x": x,
+            "y": np.asarray(y, dtype=np.int64),
+            "s": np.array([STR_DOMAIN[i] for i in s_idx]),
+        },
+        rows_per_partition=rows_per_part,
+        nulls=nulls,
+    )
+    return tbl
+
+
+@st.composite
+def predicates(draw, depth=0):
+    """Random predicate trees over columns x (int), y (int), s (str)."""
+    if depth >= 2:
+        choice = draw(st.integers(0, 5))
+    else:
+        choice = draw(st.integers(0, 8))
+    if choice == 0:
+        return E.col("x") > draw(st.integers(-60, 60))
+    if choice == 1:
+        return E.col("x") <= draw(st.integers(-60, 60))
+    if choice == 2:
+        return E.col("y") == draw(st.integers(0, 1000))
+    if choice == 3:
+        op = draw(st.sampled_from([">", ">=", "<", "<=", "==", "!="]))
+        return E.Cmp(op, E.col("x"), E.Lit(draw(st.integers(-60, 60))))
+    if choice == 4:
+        prefix = draw(st.sampled_from(["Alpine", "Alpine I", "B", "Z", ""]))
+        return E.startswith(E.col("s"), prefix)
+    if choice == 5:
+        pat = draw(st.sampled_from(
+            ["Alpine%", "%mot", "Alpine%mot", "Bear", "%", "A%e%t"]))
+        return E.like(E.col("s"), pat)
+    if choice == 6:
+        return E.Not(draw(predicates(depth=depth + 1)))
+    if choice == 7:
+        return E.And((draw(predicates(depth=depth + 1)),
+                      draw(predicates(depth=depth + 1))))
+    return E.Or((draw(predicates(depth=depth + 1)),
+                 draw(predicates(depth=depth + 1))))
+
+
+def arith_pred(threshold: float) -> E.Pred:
+    """The paper's Sec. 3.1 complex expression over columns x, y."""
+    return (E.if_(E.col("s") == E.lit("Bear"), E.col("x") * 0.3048, E.col("x"))
+            + E.col("y") / 10.0) > threshold

@@ -1,0 +1,203 @@
+"""Pallas kernels: interpret-mode execution vs pure-jnp oracles vs the
+host engine (core/*).  Shape sweeps via hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import expr as E
+from repro.core.metadata import ScanSet
+from repro.core.prune_filter import eval_ranges_tv, extract_ranges
+from repro.core.prune_topk import run_topk, topk_oracle
+from repro.data.table import Table
+from repro.kernels import join_overlap, minmax_prune, ops, ref, topk_boundary
+
+from helpers import small_tables
+
+
+# ---------------------------------------------------------------------------
+# minmax_prune
+# ---------------------------------------------------------------------------
+
+@st.composite
+def range_problems(draw):
+    P = draw(st.integers(1, 300))
+    K = draw(st.integers(1, 6))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    mins = rng.uniform(-100, 100, size=(K, P)).astype(np.float32)
+    maxs = mins + rng.uniform(0, 50, size=(K, P)).astype(np.float32)
+    # sprinkle empty intervals (all-null partitions)
+    empty = rng.random((K, P)) < 0.1
+    mins = np.where(empty, np.inf, mins).astype(np.float32)
+    maxs = np.where(empty, -np.inf, maxs).astype(np.float32)
+    nullable = (rng.random((K, P)) < 0.2).astype(np.float32)
+    lo = rng.uniform(-120, 120, size=K).astype(np.float32)
+    hi = lo + rng.uniform(0, 100, size=K).astype(np.float32)
+    return lo, hi, mins, maxs, nullable
+
+
+class TestMinmaxPruneKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(problem=range_problems())
+    def test_kernel_matches_ref(self, problem):
+        lo, hi, mins, maxs, nullable = map(jnp.asarray, problem)
+        out_k = minmax_prune(lo, hi, mins, maxs, nullable, interpret=True)
+        out_r = ref.minmax_prune_ref(lo, hi, mins, maxs, nullable)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    @settings(max_examples=40, deadline=None)
+    @given(tbl=small_tables())
+    def test_kernel_matches_host_engine(self, tbl):
+        pred = (E.col("x") >= -10) & (E.col("y") < 700)
+        ranges = extract_ranges(pred, tbl.stats)
+        assert ranges is not None
+        host_tv = eval_ranges_tv(ranges, tbl.stats)
+        for mode in ("ref", "interpret"):
+            dev_tv = ops.prune_ranges_device(ranges, tbl.stats, mode=mode)
+            np.testing.assert_array_equal(dev_tv, host_tv)
+
+    @pytest.mark.parametrize("P", [1, 7, 2048, 2049, 5000])
+    @pytest.mark.parametrize("K", [1, 3])
+    def test_block_boundary_shapes(self, P, K):
+        rng = np.random.default_rng(P * 31 + K)
+        mins = rng.uniform(-10, 10, (K, P)).astype(np.float32)
+        maxs = mins + 1
+        nullable = np.zeros((K, P), np.float32)
+        lo = np.full(K, -5, np.float32)
+        hi = np.full(K, 5, np.float32)
+        args = map(jnp.asarray, (lo, hi, mins, maxs, nullable))
+        out_k = minmax_prune(*args, interpret=True)
+        out_r = ref.minmax_prune_ref(
+            *map(jnp.asarray, (lo, hi, mins, maxs, nullable)))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ---------------------------------------------------------------------------
+# topk_boundary
+# ---------------------------------------------------------------------------
+
+@st.composite
+def topk_problems(draw, valid_binit=False):
+    P = draw(st.integers(1, 120))
+    k = draw(st.sampled_from([1, 2, 4, 8, 16]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    rows = rng.integers(-1000, 1000, size=(P, k)).astype(np.float32)
+    # simulate partially-filled partitions with -inf padding
+    fill = rng.integers(0, k + 1, size=P)
+    for p in range(P):
+        rows[p, fill[p]:] = -np.inf
+    rows = -np.sort(-rows, axis=1)  # desc per row
+    if valid_binit:
+        # Sec. 5.4 boundaries are WITNESSES: k rows >= b_init must exist.
+        finite = np.sort(rows[np.isfinite(rows)])[::-1]
+        kth = finite[k - 1] if len(finite) >= k else -np.inf
+        binit = draw(st.sampled_from([-np.inf, float(kth), float(kth) - 10.0]))
+    else:
+        binit = draw(st.sampled_from([-np.inf, -500.0, 0.0, 500.0]))
+    return rows, np.float32(binit)
+
+
+class TestTopKBoundaryKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(problem=topk_problems())
+    def test_kernel_matches_ref(self, problem):
+        rows, binit = problem
+        skip_k, heap_k = topk_boundary(jnp.asarray(rows), jnp.asarray(binit),
+                                       interpret=True)
+        skip_r, heap_r = ref.topk_boundary_ref(jnp.asarray(rows), binit)
+        np.testing.assert_array_equal(np.asarray(skip_k), np.asarray(skip_r))
+        np.testing.assert_allclose(np.asarray(heap_k), np.asarray(heap_r))
+
+    @settings(max_examples=40, deadline=None)
+    @given(problem=topk_problems(valid_binit=True))
+    def test_prefix_formulation_dominates(self, problem):
+        """DESIGN.md §6: with a *valid* upfront boundary (a witness, as
+        Sec. 5.4 constructs), prefix-merge gives the same heap and a skip
+        mask that is a superset of the sequential one."""
+        rows, binit = problem
+        skip_s, heap_s = ref.topk_boundary_ref(jnp.asarray(rows), binit)
+        skip_p, heap_p = ref.topk_boundary_prefix_ref(jnp.asarray(rows), binit)
+        np.testing.assert_allclose(np.sort(np.asarray(heap_p)),
+                                   np.sort(np.asarray(heap_s)))
+        assert (np.asarray(skip_p) >= np.asarray(skip_s)).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(tbl=small_tables(with_nulls=False), k=st.sampled_from([1, 4, 8]))
+    def test_device_topk_matches_host_engine(self, tbl, k):
+        """End-to-end: block-topk staging + kernel == core.run_topk values."""
+        ctx = tbl.global_ctx()
+        vals, _ = ctx.col("y")
+        # identical processing order for both paths: sorted by block max
+        scan = ScanSet.full(tbl.num_partitions)
+        host = run_topk(tbl, scan, "y", k, strategy="sort")
+        rows = ops.build_block_topk(vals.astype(np.float32),
+                                    tbl.part_bounds, k)
+        bmax = tbl.stats.col_max("y")
+        order = np.argsort(-bmax, kind="stable")
+        skip, heap = ops.topk_boundary_device(rows[order], mode="interpret")
+        oracle = topk_oracle(tbl, "y", k)
+        got = np.sort(heap[heap > -np.inf])[::-1]
+        np.testing.assert_allclose(got, oracle.astype(np.float32))
+        # identical skip decisions as the host scan loop
+        host_skip = np.isin(scan.part_ids[order], host.skipped).astype(np.int32)
+        np.testing.assert_array_equal(skip, host_skip)
+
+    def test_padding_rows_harmless(self):
+        rows = np.full((300, 4), -np.inf, dtype=np.float32)  # > BLOCK_ROWS
+        rows[0] = [5, 4, 3, 2]
+        skip, heap = topk_boundary(jnp.asarray(rows), jnp.float32(-np.inf),
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(heap), [5, 4, 3, 2])
+
+
+# ---------------------------------------------------------------------------
+# join_overlap
+# ---------------------------------------------------------------------------
+
+@st.composite
+def overlap_problems(draw):
+    P = draw(st.integers(1, 400))
+    D = draw(st.integers(1, 500))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    pmin = rng.integers(0, 10_000, size=P).astype(np.float32)
+    pmax = pmin + rng.integers(0, 100, size=P).astype(np.float32)
+    empty = rng.random(P) < 0.05
+    pmin = np.where(empty, np.inf, pmin).astype(np.float32)
+    pmax = np.where(empty, -np.inf, pmax).astype(np.float32)
+    distinct = np.unique(rng.integers(0, 10_000, size=D)).astype(np.float32)
+    return pmin, pmax, distinct
+
+
+class TestJoinOverlapKernel:
+    @settings(max_examples=40, deadline=None)
+    @given(problem=overlap_problems())
+    def test_kernel_matches_ref(self, problem):
+        pmin, pmax, distinct = map(jnp.asarray, problem)
+        out_k = join_overlap(pmin, pmax, distinct, interpret=True)
+        out_r = ref.join_overlap_ref(pmin, pmax, distinct)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    @settings(max_examples=40, deadline=None)
+    @given(problem=overlap_problems())
+    def test_oracle_truth(self, problem):
+        """Both implementations vs brute force."""
+        pmin, pmax, distinct = problem
+        brute = np.array(
+            [((distinct >= lo) & (distinct <= hi)).any()
+             for lo, hi in zip(pmin, pmax)], dtype=np.int32)
+        out_r = ref.join_overlap_ref(*map(jnp.asarray, problem))
+        np.testing.assert_array_equal(np.asarray(out_r), brute)
+
+    @pytest.mark.parametrize("P,D", [(1, 1), (1024, 2048), (1025, 2049), (3000, 10)])
+    def test_block_boundary_shapes(self, P, D):
+        rng = np.random.default_rng(P + D)
+        pmin = rng.uniform(0, 1000, P).astype(np.float32)
+        pmax = pmin + 5
+        distinct = np.sort(rng.choice(max(2000, 2 * D), size=D, replace=False)).astype(np.float32)
+        out_k = join_overlap(*map(jnp.asarray, (pmin, pmax, distinct)),
+                             interpret=True)
+        out_r = ref.join_overlap_ref(*map(jnp.asarray, (pmin, pmax, distinct)))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))

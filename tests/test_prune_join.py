@@ -1,0 +1,114 @@
+"""JOIN pruning (paper Sec. 6): probabilistic but never incorrect."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metadata import ScanSet
+from repro.core.prune_join import (BlockedBloom, prune_probe, summarize_build)
+from repro.data.table import Table
+
+
+class TestBlockedBloom:
+    @settings(max_examples=60, deadline=None)
+    @given(keys=st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=300))
+    def test_no_false_negatives(self, keys):
+        keys = np.asarray(keys, dtype=np.int64)
+        bloom = BlockedBloom(len(keys))
+        bloom.add(keys)
+        assert bloom.contains(keys).all()
+
+    def test_false_positive_rate_reasonable(self):
+        rng = np.random.default_rng(0)
+        keys = rng.choice(2**40, size=10_000, replace=False)
+        bloom = BlockedBloom(len(keys), bits_per_key=16)
+        bloom.add(keys)
+        probe = rng.choice(2**40, size=50_000, replace=False)
+        probe = probe[~np.isin(probe, keys)]
+        fpr = bloom.contains(probe).mean()
+        assert fpr < 0.01, f"blocked bloom fpr {fpr:.4f} too high"
+
+    def test_size_bounded(self):
+        bloom = BlockedBloom(100_000, bits_per_key=16)
+        assert bloom.size_bytes <= 100_000 * 4  # ~2 bytes/key at 16 bits
+
+
+class TestBuildSummary:
+    def test_small_ndv_uses_distinct(self):
+        s = summarize_build(np.array([1, 2, 3, 2, 1]), ndv_limit=10)
+        assert s.distinct is not None and s.bloom is None
+        assert s.min == 1 and s.max == 3
+
+    def test_large_ndv_uses_bloom(self):
+        s = summarize_build(np.arange(10_000), ndv_limit=100)
+        assert s.bloom is not None and s.distinct is None
+        # summary stays a small fraction of the build side (Sec. 6.1)
+        assert s.size_bytes < 10_000 * 8 * 0.5
+
+    def test_nulls_excluded(self):
+        s = summarize_build(np.array([1, 2, 3]), null_mask=np.array([False, True, False]))
+        assert s.count == 2 and s.max == 3
+
+
+def _probe_table(vals, rows_per_partition=4):
+    return Table.build("probe", {"k": np.asarray(vals, dtype=np.int64)},
+                       rows_per_partition=rows_per_partition)
+
+
+class TestProbePruning:
+    def test_range_pruning(self):
+        tbl = _probe_table(np.arange(40))          # partitions of 4: [0..3],[4..7]...
+        summary = summarize_build(np.array([9, 10, 11]))
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
+        kept = set(res.scan.part_ids.tolist())
+        assert kept == {2}  # only partition [8..11] overlaps
+        assert res.pruned_by_range + res.pruned_by_distinct == 9
+
+    def test_distinct_pruning_beats_range(self):
+        # build keys {0, 39}: range overlap keeps everything, distinct kills middle
+        tbl = _probe_table(np.arange(40))
+        summary = summarize_build(np.array([0, 39]))
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
+        kept = set(res.scan.part_ids.tolist())
+        assert kept == {0, 9}
+        assert res.pruned_by_distinct == 8
+
+    def test_bloom_pruning_narrow_partitions(self):
+        rng = np.random.default_rng(1)
+        build = rng.choice(1_000_000, size=20_000, replace=False)
+        tbl = _probe_table(np.arange(2_000_000, 2_000_400))  # disjoint from build
+        summary = summarize_build(build, ndv_limit=100)      # force bloom
+        assert summary.bloom is not None
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
+        assert len(res.scan) == 0  # range check already removes everything
+        # now overlapping but sparse probe values -> bloom must do the work
+        tbl2 = _probe_table(np.arange(500_000, 500_400))
+        res2 = prune_probe(ScanSet.full(tbl2.num_partitions), tbl2.stats, "k", summary)
+        # partitions whose 4-value ranges miss every build key get pruned
+        assert res2.pruned_by_bloom > 0 or len(res2.scan) < tbl2.num_partitions
+
+    def test_empty_build_removes_probe_scan(self):
+        tbl = _probe_table(np.arange(40))
+        summary = summarize_build(np.zeros(0, dtype=np.int64))
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
+        assert len(res.scan) == 0  # the paper's 100%-pruned case
+
+    @settings(max_examples=80, deadline=None)
+    @given(
+        build=st.lists(st.integers(0, 500), min_size=0, max_size=80),
+        probe=st.lists(st.integers(0, 500), min_size=4, max_size=200),
+        ndv_limit=st.sampled_from([2, 4096]),
+    )
+    def test_never_prunes_joinable_partition(self, build, probe, ndv_limit):
+        """The Sec. 6.2 guarantee: may miss prunable partitions, but never
+        prunes one containing a joinable key."""
+        build = np.asarray(build, dtype=np.int64)
+        tbl = _probe_table(probe)
+        summary = summarize_build(build, ndv_limit=ndv_limit)
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
+        kept = set(res.scan.part_ids.tolist())
+        for p in range(tbl.num_partitions):
+            ctx = tbl.partition_ctx(p)
+            v, _ = ctx.col("k")
+            if np.isin(v, build).any():
+                assert p in kept, f"pruned joinable partition {p}"

@@ -1,0 +1,105 @@
+"""LIMIT pruning (paper Sec. 4): IO-optimality and Table 2 categories."""
+
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import expr as E
+from repro.core.metadata import NO_MATCH, ScanSet
+from repro.core.prune_filter import eval_tv
+from repro.core.prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING,
+                                    PRUNED_TO_1, PRUNED_TO_N,
+                                    UNSUPPORTED_SHAPE, limit_prune)
+from repro.core.rowval import matches
+from repro.data.table import Table
+
+from helpers import predicates, small_tables
+
+
+def scan_after_filter(tbl, pred):
+    tv = eval_tv(pred, tbl.stats)
+    keep = tv > NO_MATCH
+    return ScanSet(np.where(keep)[0], tv[keep])
+
+
+def count_matching(tbl, pred, part_ids):
+    return sum(int(matches(pred, tbl.partition_ctx(int(p))).sum()) for p in part_ids)
+
+
+class TestLimitPrune:
+    def make_sorted_table(self):
+        # x sorted across partitions: predicate x >= 40 gives partitions
+        # 0 (NO), 1 (partial at boundary), 2..9 (fully matching).
+        return Table.build(
+            "t", {"x": np.arange(100, dtype=np.int64)}, rows_per_partition=10
+        )
+
+    def test_prunes_to_single_partition(self):
+        tbl = self.make_sorted_table()
+        pred = E.col("x") >= 35
+        scan = scan_after_filter(tbl, pred)
+        res = limit_prune(scan, tbl.stats, k=3)
+        assert res.applied and res.category == PRUNED_TO_1
+        assert res.partitions_after == 1
+        # the retained partition really yields >= 3 qualifying rows
+        assert count_matching(tbl, pred, res.scan.part_ids) >= 3
+
+    def test_prunes_to_minimal_multiple(self):
+        tbl = self.make_sorted_table()
+        pred = E.col("x") >= 35
+        scan = scan_after_filter(tbl, pred)
+        res = limit_prune(scan, tbl.stats, k=25)
+        assert res.applied and res.category == PRUNED_TO_N
+        assert res.partitions_after == 3  # ceil(25/10): IO-optimal
+        assert count_matching(tbl, pred, res.scan.part_ids) >= 25
+
+    def test_k0_empties_scan(self):
+        tbl = self.make_sorted_table()
+        res = limit_prune(scan_after_filter(tbl, E.true()), tbl.stats, k=0)
+        assert res.applied and res.partitions_after == 0
+
+    def test_no_fully_matching_reorders_only(self):
+        # random layout: no fully-matching partitions for a tight predicate
+        rng = np.random.default_rng(0)
+        tbl = Table.build(
+            "t", {"x": rng.permutation(100).astype(np.int64)}, rows_per_partition=10
+        )
+        pred = E.col("x") >= 95
+        scan = scan_after_filter(tbl, pred)
+        res = limit_prune(scan, tbl.stats, k=3)
+        assert not res.applied and res.category == NO_FULLY_MATCHING
+        assert res.partitions_after == res.partitions_before
+
+    def test_unsupported_shape(self):
+        tbl = self.make_sorted_table()
+        res = limit_prune(
+            scan_after_filter(tbl, E.true()), tbl.stats, k=3, supported_shape=False
+        )
+        assert res.category == UNSUPPORTED_SHAPE
+
+    def test_already_minimal(self):
+        tbl = Table.build("t", {"x": np.arange(5, dtype=np.int64)},
+                          rows_per_partition=5)
+        res = limit_prune(scan_after_filter(tbl, E.true()), tbl.stats, k=3)
+        assert res.category == ALREADY_MINIMAL
+
+    def test_no_predicate_all_partitions_fully_match(self):
+        """Trivially, without predicates every partition is fully matching
+        (Sec. 4.2) -> LIMIT pruning cuts to one partition."""
+        tbl = self.make_sorted_table()
+        res = limit_prune(scan_after_filter(tbl, E.true()), tbl.stats, k=7)
+        assert res.applied and res.partitions_after == 1
+
+    @settings(max_examples=80, deadline=None)
+    @given(tbl=small_tables(), pred=predicates(), k=...)
+    def test_pruned_scan_still_satisfies_k(self, tbl, pred, k: bool):
+        """Whenever pruning applies, the retained fully-matching partitions
+        alone must contain >= k qualifying rows (global IO-optimality means
+        correctness must not depend on any pruned partition)."""
+        k = 5 if k else 1
+        scan = scan_after_filter(tbl, pred)
+        res = limit_prune(scan, tbl.stats, k=k)
+        if res.applied and k > 0:
+            assert count_matching(tbl, pred, res.scan.part_ids) >= k
+            # minimality: dropping the smallest retained partition breaks k
+            rows = tbl.stats.row_counts[res.scan.part_ids]
+            assert rows.sum() - rows.min() < k or len(res.scan) == 1

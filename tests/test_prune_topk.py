@@ -1,0 +1,117 @@
+"""Top-k pruning (paper Sec. 5): correctness vs full-scan oracle."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import expr as E
+from repro.core.metadata import NO_MATCH, ScanSet
+from repro.core.prune_filter import eval_tv
+from repro.core.prune_topk import (order_partitions, run_topk, topk_oracle,
+                                   upfront_boundary)
+from repro.data.table import Table
+
+from helpers import predicates, small_tables
+
+
+def scan_after_filter(tbl, pred):
+    if pred is None:
+        return ScanSet.full(tbl.num_partitions)
+    tv = eval_tv(pred, tbl.stats)
+    keep = tv > NO_MATCH
+    return ScanSet(np.where(keep)[0], tv[keep])
+
+
+class TestTopKCorrectness:
+    @settings(max_examples=120, deadline=None)
+    @given(
+        tbl=small_tables(),
+        k=st.integers(1, 12),
+        desc=st.booleans(),
+        strategy=st.sampled_from(["none", "random", "sort"]),
+        upfront=st.booleans(),
+        use_pred=st.booleans(),
+        pred=predicates(),
+    )
+    def test_values_match_oracle(self, tbl, k, desc, strategy, upfront, use_pred, pred):
+        pred = pred if use_pred else None
+        scan = scan_after_filter(tbl, pred)
+        res = run_topk(tbl, scan, "y", k, pred=pred, desc=desc,
+                       strategy=strategy, use_upfront_init=upfront)
+        oracle = topk_oracle(tbl, "y", k, pred=pred, desc=desc)
+        np.testing.assert_array_equal(np.sort(res.values), np.sort(oracle))
+
+    @settings(max_examples=60, deadline=None)
+    @given(tbl=small_tables(), k=st.integers(1, 8))
+    def test_order_col_with_nulls(self, tbl, k):
+        """ORDER BY x where x may contain nulls: NULLS LAST semantics."""
+        scan = scan_after_filter(tbl, None)
+        res = run_topk(tbl, scan, "x", k, strategy="sort", use_upfront_init=True)
+        oracle = topk_oracle(tbl, "x", k)
+        np.testing.assert_array_equal(np.sort(res.values), np.sort(oracle))
+
+
+class TestProcessingOrder:
+    def clustered_table(self, clustering_sorted=True):
+        rng = np.random.default_rng(7)
+        vals = np.sort(rng.integers(0, 100_000, size=5000))
+        if not clustering_sorted:
+            vals = rng.permutation(vals)
+        return Table.build("t", {"v": vals.astype(np.int64)}, rows_per_partition=100)
+
+    def test_sorting_improves_pruning(self):
+        """Fig. 8: sorting partitions by max gives a tight boundary early."""
+        tbl = self.clustered_table(clustering_sorted=False)
+        scan = ScanSet.full(tbl.num_partitions)
+        r_sort = run_topk(tbl, scan, "v", 10, strategy="sort")
+        r_none = run_topk(tbl, scan, "v", 10, strategy="random")
+        assert r_sort.pruning_ratio >= r_none.pruning_ratio
+        # k=10 over 100-row partitions: sorted-by-max order needs at most a
+        # handful of partitions before the boundary saturates.
+        assert r_sort.pruning_ratio >= 0.75
+        assert len(r_sort.scanned) <= 12
+
+    def test_sorted_table_scans_one_partition(self):
+        """'Theoretically optimal' case: table physically sorted by the
+        ORDER BY key -> only one partition need be fetched."""
+        tbl = self.clustered_table(clustering_sorted=True)
+        scan = ScanSet.full(tbl.num_partitions)
+        res = run_topk(tbl, scan, "v", 10, strategy="sort")
+        assert len(res.scanned) == 1
+
+    def test_order_partitions_strategies(self):
+        tbl = self.clustered_table()
+        scan = ScanSet.full(tbl.num_partitions)
+        ordered = order_partitions(scan, tbl.stats, "v", "sort")
+        maxs = tbl.stats.col_max("v")[ordered.part_ids]
+        assert (np.diff(maxs) <= 0).all()
+
+
+class TestUpfrontInit:
+    def test_boundary_from_fully_matching(self):
+        """Sec. 5.4: with row counts + fully-matching partitions the
+        boundary starts tight, pruning from the very first partition."""
+        tbl = Table.build(
+            "t", {"v": np.arange(1000, dtype=np.int64)}, rows_per_partition=100
+        )
+        scan = ScanSet.full(tbl.num_partitions)  # no predicate: all FULL
+        b = upfront_boundary(scan, tbl.stats, "v", k=10)
+        # top partition holds 900..999; k=10 rows >= 990 exist; candidate (b)
+        # (sort by min desc, cum rows>=10 at first partition) gives 900.
+        assert b >= 900
+        res = run_topk(tbl, scan, "v", 10, strategy="none", use_upfront_init=True)
+        np.testing.assert_array_equal(np.sort(res.values), np.arange(990, 1000))
+        # without upfront init, the 'none' order scans everything until the
+        # heap fills; with it, the low partitions are skipped immediately.
+        res_no = run_topk(tbl, scan, "v", 10, strategy="none", use_upfront_init=False)
+        assert res.pruning_ratio >= res_no.pruning_ratio
+
+    def test_all_equal_values_no_overprune(self):
+        """Tie-heavy regression guard: every value equal -> the upfront
+        boundary equals every block max; nothing may be over-pruned."""
+        tbl = Table.build(
+            "t", {"v": np.full(100, 42, dtype=np.int64)}, rows_per_partition=10
+        )
+        scan = ScanSet.full(tbl.num_partitions)
+        res = run_topk(tbl, scan, "v", 5, strategy="sort", use_upfront_init=True)
+        np.testing.assert_array_equal(res.values, np.full(5, 42))

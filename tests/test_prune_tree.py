@@ -1,0 +1,90 @@
+"""Adaptive pruning-tree (paper Sec. 3.2): reorder + cutoff invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import expr as E
+from repro.core.metadata import NO_MATCH
+from repro.core.prune_filter import eval_tv
+from repro.core.prune_tree import AdaptivePruner
+
+from helpers import predicates, small_tables
+
+
+class TestAdaptiveTree:
+    @settings(max_examples=80, deadline=None)
+    @given(tbl=small_tables(), pred=predicates())
+    def test_no_cutoff_matches_exact(self, tbl, pred):
+        res = AdaptivePruner(pred, cutoff=False).run(tbl.stats, batch_size=3)
+        np.testing.assert_array_equal(res.tv, eval_tv(pred, tbl.stats))
+
+    @settings(max_examples=80, deadline=None)
+    @given(tbl=small_tables(), pred=predicates())
+    def test_cutoff_never_overprunes(self, tbl, pred):
+        """Disabling a pruner may only LOSE pruning power, never gain it."""
+        res = AdaptivePruner(pred, cutoff=True, scan_cost=2.0).run(
+            tbl.stats, batch_size=2
+        )
+        exact = eval_tv(pred, tbl.stats)
+        assert not ((res.tv == NO_MATCH) & (exact != NO_MATCH)).any()
+
+    def test_reordering_reduces_work(self):
+        """A cheap, highly selective filter should migrate to the front of
+        the AND and short-circuit the expensive one."""
+        rng = np.random.default_rng(3)
+        n = 20_000
+        tbl_raw = {
+            "a": np.sort(rng.integers(0, 1000, size=n)),  # selective, clustered
+            "b": rng.integers(0, 10, size=n),             # useless filter
+        }
+        from repro.data.table import Table
+        tbl = Table.build("t", tbl_raw, rows_per_partition=100)
+        # expensive unselective leaf FIRST in written order
+        expensive = (E.col("b") * 1.0 + E.col("b") * 2.0 + E.col("b") * 3.0) >= 0.0
+        selective = E.col("a") >= 995
+        pred = E.And((expensive, selective))
+        adaptive = AdaptivePruner(pred, reorder=True, cutoff=False)
+        r1 = adaptive.run(tbl.stats, batch_size=10)
+        fixed = AdaptivePruner(pred, reorder=False, cutoff=False)
+        r2 = fixed.run(tbl.stats, batch_size=10)
+        np.testing.assert_array_equal(r1.tv, r2.tv)
+        assert r1.work_units < r2.work_units, (r1.work_units, r2.work_units)
+
+    def test_cutoff_disables_ineffective_and_child(self):
+        rng = np.random.default_rng(4)
+        n = 10_000
+        from repro.data.table import Table
+        tbl = Table.build(
+            "t",
+            {"a": np.sort(rng.integers(0, 1000, size=n)),
+             "b": rng.integers(0, 10, size=n)},
+            rows_per_partition=100,
+        )
+        useless = (E.col("b") >= 0)          # never prunes anything
+        selective = E.col("a") >= 900
+        pruner = AdaptivePruner(E.And((useless, selective)),
+                                scan_cost=5.0, cutoff=True)
+        res = pruner.run(tbl.stats, batch_size=10)
+        report = {r["pred"]: r for r in res.leaf_report}
+        assert report[repr(useless)]["disabled"]
+        assert not report[repr(selective)]["disabled"]
+        # correctness preserved
+        exact = eval_tv(E.And((useless, selective)), tbl.stats)
+        assert not ((res.tv == NO_MATCH) & (exact != NO_MATCH)).any()
+
+    def test_or_children_never_cut(self):
+        """Paper: removing an OR child poisons the whole branch."""
+        rng = np.random.default_rng(5)
+        from repro.data.table import Table
+        tbl = Table.build(
+            "t",
+            {"a": np.sort(rng.integers(0, 1000, size=5000)),
+             "b": rng.integers(0, 10, size=5000)},
+            rows_per_partition=50,
+        )
+        useless = E.col("b") >= 0
+        selective = E.col("a") >= 900
+        pruner = AdaptivePruner(E.Or((useless, selective)),
+                                scan_cost=0.1, cutoff=True)
+        res = pruner.run(tbl.stats, batch_size=10)
+        assert not any(r["disabled"] for r in res.leaf_report)

@@ -1,0 +1,192 @@
+"""End-to-end behaviour: the combined pruning flow (paper Sec. 7) on the
+guiding IUCN example, with execution results proven unchanged by pruning."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import expr as E
+from repro.core.flow import JoinSpec, PruningPipeline, Query, TableScanSpec
+from repro.data.generator import make_events_table, make_users_table
+from repro.data.scan import execute_query
+from repro.data.table import Table
+
+
+def guiding_tables(seed=0):
+    """The paper's running example: trails (dimension) + tracking_data
+    (fact).  Production-shaped: the fact table arrives clustered by area,
+    and species correlates with area (alpine wildlife lives high up) — the
+    column-correlation effect Sec. 8.3 credits for real-world pruning."""
+    rng = np.random.default_rng(seed)
+    n_tr = 2000
+    mountains = np.sort(rng.integers(0, 500, size=n_tr))
+    trails = Table.build(
+        "trails",
+        {
+            "mountain": mountains.astype(np.int64),
+            "altit": rng.uniform(934, 7674, size=n_tr),
+            "unit": rng.choice(["feet", "meters"], size=n_tr),
+            "name": rng.choice(
+                ["Marked-A-Ridge", "Marked-B-Ridge", "Basecamp", "Unmarked"],
+                size=n_tr, p=[0.015, 0.015, 0.47, 0.5],
+            ),
+        },
+        rows_per_partition=100,
+    )
+    n_td = 50_000
+    area = np.sort(rng.integers(0, 500, size=n_td)).astype(np.int64)
+    alpine = (area >= 350) & (rng.random(n_td) < 0.7)
+    species = np.where(
+        alpine,
+        rng.choice(["Alpine Ibex", "Alpine Marmot", "Alpine Chough"], size=n_td),
+        rng.choice(["Bear", "Wolf", "Duck", "Pike"], size=n_td),
+    )
+    tracking = Table.build(
+        "tracking_data",
+        {
+            "area": area,
+            "species": species,
+            "s": rng.integers(5, 200, size=n_td).astype(np.int64),
+            "num_sightings": rng.integers(0, 100_000, size=n_td).astype(np.int64),
+        },
+        rows_per_partition=500,
+    )
+    return trails, tracking
+
+
+TRAILS_PRED = (
+    E.if_(E.col("unit") == E.lit("feet"), E.col("altit") * 0.3048, E.col("altit"))
+    > 1500
+) & E.like(E.col("name"), "Marked-%-Ridge")
+TRACKING_PRED = E.like(E.col("species"), "Alpine%") & (E.col("s") >= 50)
+
+
+def guiding_query(trails, tracking, limit=3):
+    """Sec. 6.1's full example: JOIN + filters + ORDER BY ... LIMIT 3."""
+    return Query(
+        scans={
+            "trails": TableScanSpec(trails, TRAILS_PRED),
+            "tracking_data": TableScanSpec(tracking, TRACKING_PRED),
+        },
+        join=JoinSpec("trails", "tracking_data", "mountain", "area"),
+        limit=limit,
+        order_by=("tracking_data", "num_sightings", True),
+    )
+
+
+class TestGuidingExample:
+    def test_all_three_techniques_fire(self):
+        trails, tracking = guiding_tables()
+        q = guiding_query(trails, tracking)
+        report = PruningPipeline().run(q)
+        td = report.per_scan["tracking_data"]
+        assert td["filter"].applied
+        assert td["join"].applied and td["join"].ratio > 0
+        assert td["topk"].applied
+        assert report.overall_ratio > 0.5
+
+    def test_pruned_execution_matches_unpruned(self):
+        trails, tracking = guiding_tables()
+        q = guiding_query(trails, tracking)
+        report = PruningPipeline().run(q)
+        pruned = execute_query(q, report)
+        baseline = execute_query(q, None)
+        # top-k output: the ORDER BY column values must be identical
+        np.testing.assert_array_equal(
+            pruned.columns["tracking_data.num_sightings"],
+            baseline.columns["tracking_data.num_sightings"],
+        )
+        assert pruned.total_bytes() < baseline.total_bytes()
+
+    def test_disabling_techniques_changes_io_not_results(self):
+        trails, tracking = guiding_tables()
+        q = guiding_query(trails, tracking)
+        full = PruningPipeline().run(q)
+        no_join = PruningPipeline(enable_join=False).run(q)
+        r_full = execute_query(q, full)
+        r_nojoin = execute_query(q, no_join)
+        np.testing.assert_array_equal(
+            r_full.columns["tracking_data.num_sightings"],
+            r_nojoin.columns["tracking_data.num_sightings"],
+        )
+        assert r_full.total_bytes() <= r_nojoin.total_bytes()
+
+
+class TestLimitFlow:
+    def test_limit_query_end_to_end(self):
+        rng = np.random.default_rng(1)
+        events = make_events_table(rng, n_rows=20_000, rows_per_partition=500)
+        q = Query(
+            scans={"events": TableScanSpec(events, E.col("ts") >= 9_000_000)},
+            limit=50,
+        )
+        report = PruningPipeline().run(q)
+        res = execute_query(q, report)
+        assert res.num_rows == 50
+        assert (res.columns["events.ts"] >= 9_000_000).all()
+        # LIMIT pruning should have cut the scan set hard
+        lim = report.per_scan["events"]["limit"]
+        assert lim.applied and lim.after <= 2
+
+    def test_limit_without_predicate(self):
+        rng = np.random.default_rng(2)
+        events = make_events_table(rng, n_rows=10_000, rows_per_partition=500)
+        q = Query(scans={"events": TableScanSpec(events)}, limit=10)
+        report = PruningPipeline().run(q)
+        assert report.per_scan["events"]["limit"].after == 1
+        res = execute_query(q, report)
+        assert res.num_rows == 10
+
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 200), seed=st.integers(0, 5))
+    def test_limit_always_yields_k_rows(self, k, seed):
+        rng = np.random.default_rng(seed)
+        events = make_events_table(rng, n_rows=5000, rows_per_partition=250)
+        pred = E.col("ts") >= 2_000_000
+        q = Query(scans={"events": TableScanSpec(events, pred)}, limit=k)
+        report = PruningPipeline().run(q)
+        res = execute_query(q, report)
+        baseline = execute_query(q, None)
+        assert res.num_rows == baseline.num_rows  # == min(k, matching)
+        assert (res.columns["events.ts"] >= 2_000_000).all()
+
+
+class TestJoinFlow:
+    def test_inner_join_results_unchanged(self):
+        rng = np.random.default_rng(3)
+        events = make_events_table(rng, n_rows=20_000, rows_per_partition=500,
+                                   user_clustering=0.997)
+        users = make_users_table(rng, n_rows=2000, rows_per_partition=200)
+        q = Query(
+            scans={
+                "users": TableScanSpec(users, E.col("age") >= 85),
+                "events": TableScanSpec(events),
+            },
+            join=JoinSpec("users", "events", "id", "user_id"),
+        )
+        report = PruningPipeline().run(q)
+        res = execute_query(q, report)
+        baseline = execute_query(q, None)
+        assert res.num_rows == baseline.num_rows
+        a = np.sort(res.columns["events.user_id"])
+        b = np.sort(baseline.columns["events.user_id"])
+        np.testing.assert_array_equal(a, b)
+        assert report.per_scan["events"]["join"].ratio > 0.3
+
+    def test_left_outer_join_preserves_probe_rows(self):
+        probe = Table.build(
+            "p", {"k": np.arange(20, dtype=np.int64)}, rows_per_partition=5
+        )
+        build = Table.build(
+            "b", {"k": np.array([3, 4, 5], dtype=np.int64),
+                  "v": np.array([30, 40, 50], dtype=np.int64)},
+            rows_per_partition=5,
+        )
+        q = Query(
+            scans={"b": TableScanSpec(build), "p": TableScanSpec(probe)},
+            join=JoinSpec("b", "p", "k", "k", kind="left_outer"),
+        )
+        res = execute_query(q, None)
+        assert res.num_rows == 20
+        assert res.nulls["b.v"].sum() == 17  # unmatched rows padded with NULL
