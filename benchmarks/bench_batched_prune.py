@@ -1,0 +1,153 @@
+"""Batched device pruning vs the per-query staging loop.
+
+The device plane's pitch (ISSUE 1): at workload scale the pruning decision
+itself must be cheap, so metadata is staged once per table version and Q
+queries ride one batched kernel launch instead of Q stagings + Q launches.
+This bench measures queries/sec of both regimes over P in {10k, 100k, 1M}
+partitions and Q in {1, 16, 256} queries, on the jnp ref backend (the
+container has no TPU; the staging overhead being amortized — host gather,
+f32 cast, H2D copy, dispatch — is real on every backend).
+
+Emits machine-readable ``BENCH_batched_prune.json`` next to the CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.device_stats import DeviceStats
+from repro.core.metadata import ColumnMeta, PartitionStats
+from repro.kernels import ops
+
+from .common import emit
+
+# This module writes its own richer JSON artifact (grid + acceptance);
+# benchmarks/run.py sees this flag and skips its generic per-module JSON.
+EMITS_OWN_JSON = True
+
+GRID_P = (10_000, 100_000, 1_000_000)
+GRID_Q = (1, 16, 256)
+C = 6                 # metadata columns
+MAX_K = 4             # constraints per query (bucketed to Kb=4)
+LOOP_SAMPLE = 32      # per-query loop cost is constant: time a sample,
+                      # extrapolate to Q (keeps the 1M-partition cell sane)
+
+
+def make_stats(P: int, rng) -> PartitionStats:
+    cols = [ColumnMeta(f"c{i}", "float") for i in range(C)]
+    mins = rng.uniform(-1000, 1000, size=(P, C)).astype(np.float32)
+    maxs = mins + rng.uniform(0, 100, size=(P, C)).astype(np.float32)
+    return PartitionStats(
+        columns=cols,
+        mins=mins.astype(np.float64),
+        maxs=maxs.astype(np.float64),
+        null_counts=np.zeros((P, C), dtype=np.int64),
+        row_counts=np.full(P, 100, dtype=np.int64),
+    )
+
+
+def make_queries(Q: int, rng):
+    """Q conjunctive-range queries; f32-exact bounds, 1..MAX_K constraints."""
+    out = []
+    for _ in range(Q):
+        k = int(rng.integers(1, MAX_K + 1))
+        cids = rng.choice(C, size=k, replace=False)
+        lo = rng.uniform(-1000, 1000, size=k).astype(np.float32)
+        hi = (lo + rng.uniform(0, 500, size=k).astype(np.float32)).astype(np.float32)
+        out.append([(int(c), float(l), float(h))
+                    for c, l, h in zip(cids, lo, hi)])
+    return out
+
+
+def _time(fn, repeats: int) -> float:
+    """Median wall seconds of fn()."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
+        json_path: str = "BENCH_batched_prune.json"):
+    rng = np.random.default_rng(0)
+    rows, cells = [], []
+    for P in grid_p:
+        stats = make_stats(P, rng)
+        dstats = DeviceStats.stage(stats)     # once per table version
+        repeats = 3 if P <= 100_000 else 1
+        for Q in grid_q:
+            queries = make_queries(Q, rng)
+
+            # Regime A — per-query loop: every query re-gathers the [K, P]
+            # slice on the host, re-uploads, launches the 1-query kernel.
+            sample = queries[:min(Q, LOOP_SAMPLE)]
+
+            def loop():
+                for ranges in sample:
+                    ops.prune_ranges_device(ranges, stats, mode="ref")
+
+            loop()                            # warm jit caches
+            s_loop = _time(loop, repeats) / len(sample)   # sec per query
+            qps_loop = 1.0 / s_loop
+
+            # Regime B — batched: resident planes, one launch for all Q.
+            def batched():
+                ops.prune_ranges_batched_device(queries, dstats, mode="ref")
+
+            batched()                         # warm jit caches
+            s_batched = _time(batched, repeats)
+            qps_batched = Q / s_batched
+
+            cell = dict(
+                P=P, Q=Q,
+                us_per_query_loop=s_loop * 1e6,
+                us_total_batched=s_batched * 1e6,
+                qps_loop=qps_loop,
+                qps_batched=qps_batched,
+                speedup=qps_batched / qps_loop,
+            )
+            cells.append(cell)
+            rows.append((
+                f"batched_prune_P{P}_Q{Q}",
+                s_batched * 1e6,
+                f"qps_batched={qps_batched:.0f} qps_loop={qps_loop:.0f} "
+                f"x{cell['speedup']:.1f}",
+            ))
+    if csv:
+        emit(rows)
+    if json_path:
+        accept = [c for c in cells if c["P"] == 100_000 and c["Q"] == 256]
+        payload = dict(
+            bench="batched_prune",
+            backend="ref",
+            columns=C,
+            max_constraints=MAX_K,
+            loop_sample=LOOP_SAMPLE,
+            grid=cells,
+            acceptance=dict(
+                target="qps_batched >= 5x qps_loop at Q=256, P=100k",
+                speedup=accept[0]["speedup"] if accept else None,
+                passed=bool(accept and accept[0]["speedup"] >= 5.0),
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows, cells
+
+
+def main():
+    # BENCH_JSON_DIR is set by benchmarks/run.py from --json-dir; empty
+    # means JSON emission is disabled.  Standalone runs default to CWD.
+    json_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    run(json_path=os.path.join(json_dir, "BENCH_batched_prune.json")
+        if json_dir else "")
+
+
+if __name__ == "__main__":
+    main()

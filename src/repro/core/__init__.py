@@ -8,6 +8,7 @@ Four techniques (paper sections in parentheses), composed by ``flow``:
 """
 
 from . import expr
+from .device_stats import DeviceStats, DeviceStatsCache
 from .expr import (and_, col, if_, in_, invert, is_not_null, is_null, like, lit,
                    or_, startswith, true)
 from .flow import JoinSpec, PruningPipeline, PruningReport, Query, TableScanSpec
@@ -24,6 +25,7 @@ __all__ = [
     "is_not_null", "true", "and_", "or_", "invert",
     "Query", "TableScanSpec", "JoinSpec", "PruningPipeline", "PruningReport",
     "ColumnMeta", "PartitionStats", "ScanSet", "pruning_ratio",
+    "DeviceStats", "DeviceStatsCache",
     "NO_MATCH", "PARTIAL_MATCH", "FULL_MATCH",
     "eval_tv", "extract_ranges", "fully_matching_two_pass",
     "BlockedBloom", "BuildSummary", "summarize_build", "prune_probe",

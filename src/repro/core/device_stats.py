@@ -1,0 +1,271 @@
+"""Device-resident metadata plane: stage partition stats once, prune forever.
+
+The per-query device path used to re-gather and re-upload a fresh ``[K, P]``
+stat slice for every query (a host transpose + H2D copy per launch).  At
+fleet scale the pruning *decision* must be as cheap as the paper's headline
+makes it look, so the metadata becomes a persistent, index-like device
+structure instead of per-query scaffolding (cf. Extensible Data Skipping's
+metadata indexes):
+
+  * ``DeviceStatsCache.get`` stages a table's full ``[C, P]`` mins / maxs /
+    demote planes to device **once per table version** (keyed like
+    ``predicate_cache.TableVersion``) — after that, per-query staging is an
+    on-device row gather of the resident arrays, no host work.
+  * DML invalidates: ``insert_partitions`` / any version bump produces a
+    different key, and the stale entry for the same table is dropped.
+  * Eviction is always safe (a miss simply re-stages).
+
+Precision contract (the single place stats are downcast to f32)
+---------------------------------------------------------------
+Host metadata is float64; kernels evaluate in float32 for VPU throughput.
+Values outside f32's 24-bit mantissa (e.g. int64 keys > 2**24) cannot be
+represented exactly, so the cast is *widening* and *demoting*:
+
+  * partition mins are rounded toward -inf, maxs toward +inf, and query
+    lows/highs likewise (lo down, hi up).  Every interval only grows, so
+    the kernel can never declare a false NO_MATCH — a pruned partition is
+    always truly empty of matches (the correctness-critical direction);
+  * wherever a min/max cast was inexact the partition's ``demote`` plane is
+    set (same mechanism as nullability), suppressing FULL_MATCH for that
+    partition.  Constraints whose lo/hi cast inexactly report
+    ``bounds_exact=False`` and the wrapper demotes FULL host-side.
+
+Net effect: int64 keys > 2**24 can only *false-negative* FULL (degrade to
+PARTIAL, costing a scan) and can never *false-positive* NO_MATCH or FULL.
+``tests/test_device_plane.py`` holds the regression test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .metadata import PartitionStats
+from .predicate_cache import TableVersion
+
+_F32_NEG = np.float32(-np.inf)
+_F32_POS = np.float32(np.inf)
+_F32_MAX = np.float32(np.finfo(np.float32).max)
+
+
+def round_down_f32(x: np.ndarray) -> np.ndarray:
+    """f64 -> f32 rounding toward -inf (result <= x always)."""
+    x = np.asarray(x, dtype=np.float64)
+    f = x.astype(np.float32)
+    with np.errstate(over="ignore", invalid="ignore"):
+        return np.where(f.astype(np.float64) > x, np.nextafter(f, _F32_NEG), f)
+
+
+def round_up_f32(x: np.ndarray) -> np.ndarray:
+    """f64 -> f32 rounding toward +inf (result >= x always)."""
+    x = np.asarray(x, dtype=np.float64)
+    f = x.astype(np.float32)
+    with np.errstate(over="ignore", invalid="ignore"):
+        return np.where(f.astype(np.float64) < x, np.nextafter(f, _F32_POS), f)
+
+
+def cast_stats_f32(
+    mins: np.ndarray, maxs: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Widening downcast of stat planes; returns (mins32, maxs32, inexact).
+
+    ``inexact`` is True wherever either bound moved — those partitions must
+    never be declared FULL (fed into the demote plane alongside nulls).
+
+    The planes are additionally clamped to the finite f32 extremes: the
+    batched kernel gathers stat rows via a one-hot matmul, and a 0-weight
+    x inf product would poison the row with NaN.  Clamping ±inf narrows
+    the interval, so clamped entries are marked inexact (FULL-demoted);
+    NO_MATCH stays safe because ``cast_bounds_f32`` clamps query bounds
+    with the same monotone map, keeping every comparison's two sides
+    consistent.  All-null partitions' empty intervals survive as
+    (+f32max, -f32max) — still empty.
+    """
+    mins32 = round_down_f32(mins).astype(np.float32)
+    maxs32 = round_up_f32(maxs).astype(np.float32)
+    inexact = (mins32.astype(np.float64) != mins) | (
+        maxs32.astype(np.float64) != maxs)
+    mins_c = np.clip(mins32, -_F32_MAX, _F32_MAX)
+    maxs_c = np.clip(maxs32, -_F32_MAX, _F32_MAX)
+    inexact |= (mins_c != mins32) | (maxs_c != maxs32)
+    return mins_c, maxs_c, inexact
+
+
+def cast_bounds_f32(
+    los: np.ndarray, his: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Widening downcast of query range bounds (lo down, hi up).
+
+    Returns (lo32, hi32, exact) where ``exact`` is per-constraint; a False
+    entry means FULL must be demoted to PARTIAL for the whole query (the
+    widened range may admit rows the true range excludes).
+
+    Bounds are clamped to the finite f32 extremes to match the stat
+    planes (see cast_stats_f32).  One-sided infinite bounds lose nothing:
+    every clamped stat satisfies ``>= -f32max`` exactly as it satisfied
+    ``>= -inf``.  Degenerate lo=+inf / hi=-inf bounds can no longer
+    *prove* FULL in the clamped domain, so they are flagged not exact.
+    """
+    los = np.asarray(los, dtype=np.float64)
+    his = np.asarray(his, dtype=np.float64)
+    lo32 = round_down_f32(los).astype(np.float32)
+    hi32 = round_up_f32(his).astype(np.float32)
+    exact = (lo32.astype(np.float64) == los) & (hi32.astype(np.float64) == his)
+    exact &= ~np.isposinf(los) & ~np.isneginf(his)
+    lo32 = np.clip(lo32, -_F32_MAX, _F32_MAX).astype(np.float32)
+    hi32 = np.clip(hi32, -_F32_MAX, _F32_MAX).astype(np.float32)
+    return lo32, hi32, exact
+
+
+def snap_bounds_integral(
+    los: np.ndarray, his: np.ndarray, integral: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Tighten range bounds on integral-domain columns: lo -> ceil, hi -> floor.
+
+    Int columns and dictionary codes only take integer (or, for unseen
+    string literals, never-attained half-integer) values, so ``x > 5``
+    lowered to ``lo = nextafter(5)`` is exactly ``lo = 6`` — an integer
+    that (below 2**24) casts to f32 exactly, keeping the device path
+    identical to the f64 host oracle on the paper's workloads instead of
+    conservatively demoting FULL.  No-op on float columns and on the
+    infinite padding sentinels.
+    """
+    los = np.asarray(los, dtype=np.float64)
+    his = np.asarray(his, dtype=np.float64)
+    integral = np.asarray(integral, dtype=bool)
+    los = np.where(integral & np.isfinite(los), np.ceil(los), los)
+    his = np.where(integral & np.isfinite(his), np.floor(his), his)
+    return los, his
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    """A table's resident metadata plane: [C, P] device arrays, f32."""
+
+    table_name: str
+    version: int
+    mins: jnp.ndarray      # [C, P] widened (rounded toward -inf)
+    maxs: jnp.ndarray      # [C, P] widened (rounded toward +inf)
+    demote: jnp.ndarray    # [C, P] 1.0 where nulls or inexact cast: no FULL
+    integral: np.ndarray   # [C] bool, host-side: int/dictionary-code column
+
+    @property
+    def num_columns(self) -> int:
+        return self.mins.shape[0]
+
+    @property
+    def num_partitions(self) -> int:
+        return self.mins.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.mins.nbytes + self.maxs.nbytes + self.demote.nbytes)
+
+    def gather(self, cids: np.ndarray):
+        """On-device row gather -> per-constraint [K, P] planes.
+
+        This replaces the old host transpose + H2D copy per query; the
+        resident [C, P] arrays never leave the device.
+        """
+        cids = jnp.asarray(np.asarray(cids, dtype=np.int32))
+        return (jnp.take(self.mins, cids, axis=0),
+                jnp.take(self.maxs, cids, axis=0),
+                jnp.take(self.demote, cids, axis=0))
+
+    @staticmethod
+    def stage(stats: PartitionStats, table_name: str = "",
+              version: int = 0) -> "DeviceStats":
+        """Host [P, C] f64 stats -> device [C, P] f32 planes (one H2D copy)."""
+        mins32, maxs32, inexact = cast_stats_f32(stats.mins.T, stats.maxs.T)
+        demote = ((stats.null_counts.T > 0) | inexact).astype(np.float32)
+        integral = np.array([c.kind != "float" for c in stats.columns],
+                            dtype=bool)
+        return DeviceStats(
+            table_name=table_name,
+            version=version,
+            mins=jnp.asarray(mins32),
+            maxs=jnp.asarray(maxs32),
+            demote=jnp.asarray(demote),
+            integral=integral,
+        )
+
+
+class DeviceStatsCache:
+    """Once-per-table-version staging of metadata planes, LRU-bounded.
+
+    Keys are ``(table_name, version, stats.uid)``: the version is the DML
+    identity ``predicate_cache.TableVersion`` tracks (insert_partitions,
+    delete, order-column update bump it and naturally miss), and the
+    stats uid distinguishes a *rebuilt* table — same name, same shape,
+    new data — from the object that was staged, so a stale plane can
+    never serve it.  Superseded same-table (same-uid) entries are dropped
+    eagerly; entries of dead rebuilt tables age out via the LRU bound.
+    """
+
+    def __init__(self, max_entries: int = 16):
+        self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(table, tv: Optional[TableVersion]) -> Tuple:
+        # stats.uid guards against a rebuilt table (same name, same shape,
+        # new data) silently hitting the stale staged plane — stale stats
+        # would break NO_MATCH safety, the one direction that loses rows.
+        version = tv.version if tv is not None else 0
+        return (table.name, version, table.stats.uid)
+
+    def get(self, table, tv: Optional[TableVersion] = None) -> DeviceStats:
+        """The table's resident DeviceStats, staging on first touch."""
+        key = self._key(table, tv)
+        e = self.entries.get(key)
+        if e is not None:
+            self.hits += 1
+            self.entries.move_to_end(key)
+            return e
+        self.misses += 1
+        # A version bump supersedes older stagings of the same table
+        # object (same uid).  Same-name entries with a different uid are
+        # other live tables sharing the name — left alone (LRU bounds
+        # them), so alternating tables don't thrash each other.
+        stale = [k for k in self.entries
+                 if k[0] == table.name and k[2] == table.stats.uid]
+        for k in stale:
+            del self.entries[k]
+        e = DeviceStats.stage(table.stats, table.name, key[1])
+        self.entries[key] = e
+        while len(self.entries) > self.max_entries:
+            self.entries.popitem(last=False)
+        return e
+
+    def invalidate(self, table_name: str) -> None:
+        stale = [k for k in self.entries if k[0] == table_name]
+        for k in stale:
+            del self.entries[k]
+
+    # ---- DML hooks (mirror predicate_cache's safety analysis; staging a
+    # stale stats plane is never *unsafe* for NO_MATCH only if stats were
+    # still valid, which DML breaks — so every mutation invalidates) ------
+
+    def on_insert(self, table_name: str) -> None:
+        self.invalidate(table_name)
+
+    def on_delete(self, table_name: str) -> None:
+        self.invalidate(table_name)
+
+    def on_update(self, table_name: str, column: str) -> None:
+        self.invalidate(table_name)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())

@@ -122,6 +122,8 @@ class PruningPipeline:
         filter_mode: str = "host",   # 'host' | 'device' (runtime pruning on
                                      # accelerator via kernels/, when the
                                      # predicate lowers to conj. ranges)
+        service=None,                # serve.prune_service.PruningService;
+                                     # built lazily for filter_mode='device'
     ):
         self.adaptive = adaptive
         self.topk_strategy = topk_strategy
@@ -132,6 +134,18 @@ class PruningPipeline:
         self.enable_topk = enable_topk
         self.join_ndv_limit = join_ndv_limit
         self.filter_mode = filter_mode
+        self._service = service
+
+    def device_service(self):
+        """The PruningService backing filter_mode='device' (lazy).
+
+        Sharing one service across pipelines shares its DeviceStatsCache —
+        tables are staged once per version, not once per pipeline.
+        """
+        if self._service is None:
+            from ..serve.prune_service import PruningService
+            self._service = PruningService()
+        return self._service
 
     # -- steps -------------------------------------------------------------
 
@@ -147,11 +161,9 @@ class PruningPipeline:
         else:
             tv = None
             if self.filter_mode == "device":
-                from .prune_filter import extract_ranges
-                ranges = extract_ranges(spec.pred, table.stats)
-                if ranges:
-                    from ..kernels import ops as kops
-                    tv = kops.prune_ranges_device(ranges, table.stats)
+                # Delegate to the PruningService: resident device stats
+                # (staged once per table version) + the batched kernel.
+                tv = self.device_service().scan_tv(spec)
             if tv is None:
                 tv = eval_tv(spec.pred, table.stats)
         keep = tv > NO_MATCH
@@ -185,13 +197,25 @@ class PruningPipeline:
 
     # -- driver --------------------------------------------------------------
 
-    def run(self, q: Query) -> PruningReport:
+    def run(self, q: Query, filter_sets: Optional[Dict[str, ScanSet]] = None
+            ) -> PruningReport:
+        """Run the pruning flow; ``filter_sets`` injects precomputed filter
+        scan sets (PruningService.run_batch batches that stage across a
+        workload) — later techniques run unchanged on top of them."""
         per_scan: Dict[str, Dict[str, TechniqueReport]] = {n: {} for n in q.scans}
         scan_sets: Dict[str, ScanSet] = {}
 
         # 1. filter pruning (+ fully-matching detection, one pass)
         for name, spec in q.scans.items():
-            ss, rep = self._filter_prune(spec)
+            if filter_sets is not None and name in filter_sets:
+                ss = filter_sets[name]
+                P = spec.table.num_partitions
+                rep = TechniqueReport(
+                    P, len(ss),
+                    applied=self.enable_filter
+                    and not isinstance(spec.pred, E.TruePred))
+            else:
+                ss, rep = self._filter_prune(spec)
             scan_sets[name] = ss
             per_scan[name]["filter"] = rep
 

@@ -15,6 +15,7 @@ would use a dedicated int path (not needed for the paper's workloads).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -85,12 +86,17 @@ class PartitionStats:
     null_counts: np.ndarray
     row_counts: np.ndarray
 
+    _uid_counter = itertools.count()
+
     def __post_init__(self):
         P, C = self.mins.shape
         assert self.maxs.shape == (P, C) and self.null_counts.shape == (P, C)
         assert self.row_counts.shape == (P,)
         assert len(self.columns) == C
         self._col_index = {c.name: i for i, c in enumerate(self.columns)}
+        # Process-unique identity: lets caches (device_stats) distinguish a
+        # rebuilt table from the one they staged, even at equal name/shape.
+        self.uid = next(PartitionStats._uid_counter)
 
     @property
     def num_partitions(self) -> int:

@@ -1,11 +1,13 @@
 """Pallas TPU kernels (+ ops wrappers, ref oracles).
 
 Pruning hot spots (the paper's engine):
-  minmax_prune    — conjunctive-range three-valued filter pruning (Sec. 3)
-  topk_boundary   — WAND-style boundary scan over block top-k rows (Sec. 5)
-  join_overlap    — distinct-keys vs partition-range overlap (Sec. 6)
+  minmax_prune         — conjunctive-range three-valued filter pruning (Sec. 3)
+  minmax_prune_batched — Q queries x K ranges x P partitions in one launch,
+                         against the resident metadata plane (device_stats)
+  topk_boundary        — WAND-style boundary scan over block top-k rows (Sec. 5)
+  join_overlap         — distinct-keys vs partition-range overlap (Sec. 6)
 LM hot spot:
-  flash_attention — causal online-softmax attention (prefill compute)
+  flash_attention      — causal online-softmax attention (prefill compute)
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU with interpret=True against the pure-jnp oracles in
@@ -16,7 +18,8 @@ from . import ops, ref
 from .flash_attention import flash_attention
 from .join_overlap import join_overlap
 from .minmax_prune import minmax_prune
+from .minmax_prune_batched import minmax_prune_batched
 from .topk_boundary import topk_boundary
 
-__all__ = ["ops", "ref", "minmax_prune", "topk_boundary", "join_overlap",
-           "flash_attention"]
+__all__ = ["ops", "ref", "minmax_prune", "minmax_prune_batched",
+           "topk_boundary", "join_overlap", "flash_attention"]

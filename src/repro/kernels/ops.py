@@ -4,38 +4,112 @@ Each op auto-selects the Pallas kernel on TPU, the interpret-mode kernel
 when ``interpret=True`` (CPU validation), or the pure-jnp ref as fallback.
 Host-side NumPy metadata is staged to device arrays here; the core engine
 (core/*) stays NumPy-pure so compile-time pruning never touches a device.
+
+Device pruning plane (architecture note)
+----------------------------------------
+Two staging regimes coexist:
+
+  * **Per-query** (``stage_ranges`` / ``prune_ranges_device``): gather the
+    ``[K, P]`` stat slice for one query's constraints and launch the
+    single-query kernel.  Simple, but every query pays a host transpose +
+    H2D copy + launch — fine for one-off queries, wrong for a workload.
+  * **Resident + batched** (``prune_ranges_batched_device``): the table's
+    full ``[C, P]`` planes live on device in a
+    ``core.device_stats.DeviceStatsCache`` (staged once per table
+    version); a *batch* of queries is packed into ``[Q, Kb]`` constraint
+    tables (Kb a power-of-two bucket, ``(-inf, +inf)`` no-op padding) and
+    evaluated by ``minmax_prune_batched`` in one launch, queries on the
+    sublane dim.  ``serve.prune_service.PruningService`` is the entry
+    point that groups a workload by table and drives this path.
+
+All f32 downcasts go through ``core.device_stats`` (widening + demotion;
+see its precision contract).  Integral columns (int / dictionary codes)
+get their query bounds snapped to integers first, so the f32 path stays
+exactly equal to the f64 host oracle on the paper's workloads.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.device_stats import (DeviceStats, cast_bounds_f32, cast_stats_f32,
+                                 snap_bounds_integral)
 from ..core.metadata import PartitionStats
 from . import ref
 from .join_overlap import join_overlap
 from .minmax_prune import minmax_prune
+from .minmax_prune_batched import BLOCK_Q, minmax_prune_batched
 from .topk_boundary import topk_boundary
+
+# Peak elements per gathered [Q, P_slab] plane on the jnp ref path; keeps
+# the no-Pallas fallback memory-bounded for huge P without touching the
+# kernel (whose grid already tiles P).
+_REF_SLAB_ELEMS = 1 << 25
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def k_bucket(k: int) -> int:
+    """Constraint-count bucket: next power of two >= max(k, 1).
+
+    Batches are padded up to the bucket with no-op ranges so the batched
+    kernel sees a handful of static Kb values, bounding jit recompiles.
+    """
+    return _pow2_at_least(max(k, 1))
+
+
+def q_bucket(q: int) -> int:
+    """Query-count bucket: next power of two >= max(q, BLOCK_Q)."""
+    return _pow2_at_least(max(q, 1), floor=BLOCK_Q)
+
+
+# ---------------------------------------------------------------------------
+# Per-query staging (single-launch path)
+# ---------------------------------------------------------------------------
+
+def _stage_ranges(ranges, stats: PartitionStats):
+    """One staging pass: kernel inputs + whether FULL is provable.
+
+    Returns ((lo, hi, mins, maxs, demote) device arrays, full_safe bool).
+    The f32 downcast is centralized in core.device_stats: stat intervals
+    are widened (mins down, maxs up) and partitions whose cast was inexact
+    are FULL-demoted via the nullable/demote plane; full_safe is False
+    when any query bound's own cast was inexact.
+    """
+    cids = np.array([c for c, _, _ in ranges], dtype=np.int64)
+    lo64 = np.array([l for _, l, _ in ranges], dtype=np.float64)
+    hi64 = np.array([h for _, _, h in ranges], dtype=np.float64)
+    integral = np.array([c.kind != "float" for c in stats.columns], dtype=bool)
+    lo64, hi64 = snap_bounds_integral(lo64, hi64, integral[cids])
+    lo32, hi32, exact = cast_bounds_f32(lo64, hi64)
+    mins32, maxs32, inexact = cast_stats_f32(stats.mins.T[cids],
+                                             stats.maxs.T[cids])
+    demote = ((stats.null_counts.T[cids] > 0) | inexact).astype(np.float32)
+    staged = (jnp.asarray(lo32), jnp.asarray(hi32), jnp.asarray(mins32),
+              jnp.asarray(maxs32), jnp.asarray(demote))
+    return staged, bool(exact.all())
+
+
 def stage_ranges(
-    ranges: List[Tuple[int, float, float]], stats: PartitionStats
+    ranges: List[Tuple[int, float, float]],
+    stats: PartitionStats,
 ):
     """Gather per-constraint stat rows into the kernel's [K, P] layout."""
-    cids = np.array([c for c, _, _ in ranges], dtype=np.int64)
-    lo = jnp.asarray(np.array([l for _, l, _ in ranges], dtype=np.float32))
-    hi = jnp.asarray(np.array([h for _, _, h in ranges], dtype=np.float32))
-    mins = jnp.asarray(stats.mins.T[cids].astype(np.float32))
-    maxs = jnp.asarray(stats.maxs.T[cids].astype(np.float32))
-    nullable = jnp.asarray((stats.null_counts.T[cids] > 0).astype(np.float32))
-    return lo, hi, mins, maxs, nullable
+    staged, _ = _stage_ranges(ranges, stats)
+    return staged
 
 
 def prune_ranges_device(
@@ -44,14 +118,107 @@ def prune_ranges_device(
     mode: str = "auto",          # 'auto' | 'pallas' | 'interpret' | 'ref'
 ) -> np.ndarray:
     """Three-valued conjunctive-range pruning on device; returns tv [P]."""
-    lo, hi, mins, maxs, nullable = stage_ranges(ranges, stats)
+    if not ranges:   # empty conjunction == TruePred: everything FULL
+        return np.full(stats.num_partitions, 2, dtype=np.int8)
+    (lo, hi, mins, maxs, nullable), full_safe = _stage_ranges(ranges, stats)
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         tv = ref.minmax_prune_ref(lo, hi, mins, maxs, nullable)
     else:
         tv = minmax_prune(lo, hi, mins, maxs, nullable,
                           interpret=(mode == "interpret") or not _on_tpu())
-    return np.asarray(tv)
+    tv = np.asarray(tv)
+    if not full_safe:
+        tv = np.minimum(tv, 1)   # inexact f32 bounds: FULL is not provable
+    return tv
 
+
+# ---------------------------------------------------------------------------
+# Batched multi-query path (resident metadata plane)
+# ---------------------------------------------------------------------------
+
+def pack_ranges(
+    range_lists: Sequence[List[Tuple[int, float, float]]],
+    dstats: DeviceStats,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pack per-query constraint lists into [Qb, Kb] kernel inputs.
+
+    Returns (cids int32, lo f32, hi f32, full_safe bool[Q]).  Constraint
+    slots beyond a query's K and query rows beyond Q are ``(-inf, +inf)``
+    no-ops; Kb/Qb are power-of-two buckets so recompiles stay bounded.
+    """
+    Q = len(range_lists)
+    Kb = k_bucket(max((len(r) for r in range_lists), default=1))
+    Qb = q_bucket(Q)
+    cids = np.zeros((Qb, Kb), dtype=np.int32)
+    valid = np.zeros((Qb, Kb), dtype=bool)
+    lo64 = np.full((Qb, Kb), -np.inf, dtype=np.float64)
+    hi64 = np.full((Qb, Kb), np.inf, dtype=np.float64)
+    for qi, ranges in enumerate(range_lists):
+        for ki, (cid, lo_v, hi_v) in enumerate(ranges):
+            cids[qi, ki] = cid
+            valid[qi, ki] = True
+            lo64[qi, ki] = lo_v
+            hi64[qi, ki] = hi_v
+    lo64, hi64 = snap_bounds_integral(lo64, hi64, dstats.integral[cids])
+    lo32, hi32, exact = cast_bounds_f32(lo64, hi64)
+    # cast_bounds_f32 clamps to finite f32; re-impose the (-inf, +inf)
+    # sentinel on padding slots so the kernel's no-op detection fires.
+    lo32 = np.where(valid, lo32, np.float32(-np.inf)).astype(np.float32)
+    hi32 = np.where(valid, hi32, np.float32(np.inf)).astype(np.float32)
+    full_safe = (exact | ~valid).all(axis=1)[:Q]
+    return cids, lo32, hi32, full_safe
+
+
+_batched_ref_jit = jax.jit(ref.minmax_prune_batched_ref)
+
+
+def prune_ranges_batched_device(
+    range_lists: Sequence[List[Tuple[int, float, float]]],
+    dstats: DeviceStats,
+    mode: str = "auto",          # 'auto' | 'pallas' | 'interpret' | 'ref'
+) -> np.ndarray:
+    """Evaluate Q queries' conjunctive ranges in one batched launch.
+
+    Returns tv ``[Q, P]`` int8 — row q is identical to the per-query
+    device path for query q's ranges, and to the f64 host oracle on
+    int/dictionary workloads (bounds snap to integers and cast exactly).
+    Bounds that are inexact in f32 demote FULL to PARTIAL — never a false
+    NO_MATCH or false FULL (core.device_stats precision contract).
+    """
+    Q = len(range_lists)
+    P = dstats.num_partitions
+    cids, lo, hi, full_safe = pack_ranges(range_lists, dstats)
+    Qb = cids.shape[0]
+    cids_d = jnp.asarray(cids)
+    lo_d = jnp.asarray(lo)
+    hi_d = jnp.asarray(hi)
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        slab = max(1024, _REF_SLAB_ELEMS // Qb)
+        if slab >= P:
+            tv = np.asarray(_batched_ref_jit(
+                cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote))
+        else:
+            tv = np.empty((Qb, P), dtype=np.int32)
+            for s in range(0, P, slab):
+                e = min(s + slab, P)
+                tv[:, s:e] = np.asarray(_batched_ref_jit(
+                    cids_d, lo_d, hi_d,
+                    jax.lax.slice_in_dim(dstats.mins, s, e, axis=1),
+                    jax.lax.slice_in_dim(dstats.maxs, s, e, axis=1),
+                    jax.lax.slice_in_dim(dstats.demote, s, e, axis=1)))
+    else:
+        tv = np.asarray(minmax_prune_batched(
+            cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote,
+            interpret=(mode == "interpret") or not _on_tpu()))
+    tv = tv[:Q].astype(np.int8)
+    if not full_safe.all():
+        tv[~full_safe] = np.minimum(tv[~full_safe], 1)
+    return tv
+
+
+# ---------------------------------------------------------------------------
+# Top-k / join staging
+# ---------------------------------------------------------------------------
 
 def build_block_topk(
     values: np.ndarray,
@@ -62,18 +229,42 @@ def build_block_topk(
     """Per-partition block top-k table [P, k] (desc, -inf padded).
 
     This is the metadata-sketch the TPU top-k path consumes; masked-out
-    rows (filter misses, nulls) are excluded.
+    rows (filter misses, nulls) are excluded.  Segmented formulation: one
+    lexsort by (partition, -value) then a rank-within-partition select —
+    O(N log N) total with no Python loop over P.
+
+    part_bounds must be non-decreasing row offsets (they are cumulative
+    by construction everywhere in the engine).  NaN values are dropped
+    (a NaN in a sketch row would corrupt topk_boundary's comparisons).
     """
+    part_bounds = np.asarray(part_bounds)
+    if np.any(np.diff(part_bounds) < 0):
+        raise ValueError("part_bounds must be non-decreasing row offsets")
     P = len(part_bounds) - 1
     out = np.full((P, k), -np.inf, dtype=np.float32)
-    for p in range(P):
-        s, e = int(part_bounds[p]), int(part_bounds[p + 1])
-        v = values[s:e]
-        if mask is not None:
-            v = v[mask[s:e]]
-        if v.size:
-            top = np.sort(v)[::-1][:k]
-            out[p, : len(top)] = top
+    values = np.asarray(values)
+    # Clamp like the slice values[s:e] would: bounds may overrun values.
+    cb = np.clip(part_bounds, 0, len(values))
+    lo_row, hi_row = int(cb[0]), int(cb[-1])
+    vals = values[lo_row:hi_row].astype(np.float32, copy=False)
+    pid = np.repeat(np.arange(P), np.diff(cb))
+    if mask is not None:
+        sel = np.asarray(mask, dtype=bool)[lo_row:hi_row]
+        vals = vals[sel]
+        pid = pid[sel]
+    finite = ~np.isnan(vals)
+    if not finite.all():
+        vals = vals[finite]
+        pid = pid[finite]
+    if vals.size == 0:
+        return out
+    order = np.lexsort((-vals, pid))        # partition-major, value desc
+    pid_s = pid[order]
+    vals_s = vals[order]
+    starts = np.searchsorted(pid_s, np.arange(P), side="left")
+    rank = np.arange(len(vals_s)) - starts[pid_s]
+    keep = rank < k
+    out[pid_s[keep], rank[keep]] = vals_s[keep]
     return out
 
 

@@ -22,6 +22,33 @@ def minmax_prune_ref(lo, hi, mins, maxs, nullable) -> jax.Array:
     return jnp.min(tv_k, axis=0)
 
 
+def minmax_prune_batched_ref(cids, lo, hi, mins, maxs, demote) -> jax.Array:
+    """tv [Q, P] int32 for Q queries of Kb ranges over resident [C, P] stats.
+
+    Mirrors kernels/minmax_prune_batched.py: per-constraint stat rows are
+    gathered from the resident planes by column id; ``(-inf, +inf)``
+    constraints are padding no-ops (tv=2, the AND identity).  The K loop
+    is a static Python unroll so peak memory stays O(Q*P), never O(Q*K*P).
+    """
+    Q, Kb = lo.shape
+    P = mins.shape[1]
+    tv = jnp.full((Q, P), 2, dtype=jnp.int32)
+    for k in range(Kb):
+        pmin = jnp.take(mins, cids[:, k], axis=0)       # [Q, P]
+        pmax = jnp.take(maxs, cids[:, k], axis=0)
+        pdem = jnp.take(demote, cids[:, k], axis=0)
+        lo_k = lo[:, k][:, None]
+        hi_k = hi[:, k][:, None]
+        empty = pmin > pmax
+        no = (pmax < lo_k) | (pmin > hi_k) | empty
+        full = (pmin >= lo_k) & (pmax <= hi_k) & (pdem == 0.0) & ~empty
+        tv_k = jnp.where(no, 0, jnp.where(full, 2, 1)).astype(jnp.int32)
+        noop = (lo_k == -jnp.inf) & (hi_k == jnp.inf)
+        tv_k = jnp.where(noop, 2, tv_k)
+        tv = jnp.minimum(tv, tv_k)
+    return tv
+
+
 def topk_boundary_ref(rows: jax.Array, b_init) -> tuple:
     """(skip [P] int32, heap [k]) — sequential lax.scan with jnp.sort."""
     P, k = rows.shape

@@ -1,0 +1,166 @@
+"""PruningService: the workload-facing entry point of the device plane.
+
+A production metadata service (paper Sec. 2) answers pruning questions for
+*every* query of a heavy workload, not one query at a time.  This service
+accepts a batch of ``core.flow.Query`` objects and runs their filter
+pruning as a handful of batched kernel launches:
+
+  1. each scan's predicate is lowered to conjunctive ranges
+     (``extract_ranges``); non-lowerable predicates fall back to the host
+     evaluator per scan (counted, never wrong);
+  2. lowered scans are **grouped by table**; each table's metadata plane is
+     fetched from the ``DeviceStatsCache`` (staged once per table version,
+     an on-device gather afterwards);
+  3. one ``minmax_prune_batched`` launch per table group evaluates all of
+     its queries' constraints — Q on the sublane dim, constraints padded
+     into power-of-two K-buckets — and the resulting ``[Q, P]`` tv rows
+     are scattered back into per-query ``ScanSet``s.
+
+``PruningPipeline(filter_mode="device")`` delegates its filter stage here
+(single-query batches share the same resident planes), and ``run_batch``
+drives whole pipelines over a workload with the filter stage batched.
+
+DML: route mutations through ``notify_insert / notify_delete /
+notify_update`` — they bump the table's ``TableVersion`` and invalidate
+the staged planes, so the next batch re-stages fresh metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import expr as E
+from ..core.device_stats import DeviceStatsCache
+from ..core.metadata import NO_MATCH, ScanSet
+from ..core.predicate_cache import TableVersion
+from ..core.prune_filter import eval_tv, extract_ranges
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass
+class ServiceCounters:
+    queries: int = 0
+    scans: int = 0
+    launches: int = 0          # batched kernel launches (per table group)
+    host_fallbacks: int = 0    # scans whose predicate didn't lower
+
+
+class PruningService:
+    def __init__(
+        self,
+        mode: str = "auto",            # kernel mode: auto|pallas|interpret|ref
+        cache: Optional[DeviceStatsCache] = None,
+    ):
+        self.mode = mode
+        self.cache = cache if cache is not None else DeviceStatsCache()
+        self.versions: Dict[str, TableVersion] = {}
+        self.counters = ServiceCounters()
+
+    # -- DML bookkeeping ----------------------------------------------------
+
+    def register(self, table) -> TableVersion:
+        tv = self.versions.get(table.name)
+        if tv is None:
+            tv = TableVersion(table.num_partitions)
+            self.versions[table.name] = tv
+        return tv
+
+    def notify_insert(self, table_name: str, n_partitions: int) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.insert_partitions(n_partitions)
+        self.cache.on_insert(table_name)
+
+    def notify_delete(self, table_name: str) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.version += 1
+        self.cache.on_delete(table_name)
+
+    def notify_update(self, table_name: str, column: str) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.version += 1
+        self.cache.on_update(table_name, column)
+
+    # -- pruning ------------------------------------------------------------
+
+    @staticmethod
+    def _scan_set(tv: np.ndarray) -> ScanSet:
+        keep = tv > NO_MATCH
+        return ScanSet(np.where(keep)[0], tv[keep])
+
+    def scan_tv(self, spec) -> Optional[np.ndarray]:
+        """Device tv [P] for one scan, or None when it doesn't lower.
+
+        The single-query fast path of the batched plane: resident stats,
+        Q padded to one sublane tile.  ``PruningPipeline`` calls this for
+        ``filter_mode="device"``.  Counts scans/launches/fallbacks like
+        prune_batch (``queries`` is only tracked by the batch API, which
+        knows query boundaries).
+        """
+        self.counters.scans += 1
+        ranges = extract_ranges(spec.pred, spec.table.stats)
+        if ranges is None:
+            self.counters.host_fallbacks += 1
+            return None
+        dstats = self.cache.get(spec.table, self.versions.get(spec.table.name))
+        self.counters.launches += 1
+        return kops.prune_ranges_batched_device([ranges], dstats, self.mode)[0]
+
+    def prune_batch(self, queries: Sequence) -> List[Dict[str, ScanSet]]:
+        """Filter-prune a batch of queries; per-query scan_name -> ScanSet.
+
+        One batched kernel launch per distinct table (not per query);
+        queries whose predicates don't lower are evaluated on the host.
+        """
+        self.counters.queries += len(queries)
+        results: List[Dict[str, ScanSet]] = [dict() for _ in queries]
+        # id(table) -> (table, [(query idx, scan name, ranges), ...])
+        groups: Dict[int, Tuple[object, list]] = {}
+        fallbacks: List[Tuple[int, str, object]] = []
+        for qi, q in enumerate(queries):
+            for name, spec in q.scans.items():
+                self.counters.scans += 1
+                if isinstance(spec.pred, E.TruePred):
+                    results[qi][name] = ScanSet.full(spec.table.num_partitions)
+                    continue
+                ranges = extract_ranges(spec.pred, spec.table.stats)
+                if ranges is None:
+                    fallbacks.append((qi, name, spec))
+                    continue
+                groups.setdefault(id(spec.table), (spec.table, []))[1].append(
+                    (qi, name, ranges))
+        for table, jobs in groups.values():
+            dstats = self.cache.get(table, self.versions.get(table.name))
+            tv_rows = kops.prune_ranges_batched_device(
+                [ranges for _, _, ranges in jobs], dstats, self.mode)
+            self.counters.launches += 1
+            for (qi, name, _), tv in zip(jobs, tv_rows):
+                results[qi][name] = self._scan_set(tv)
+        for qi, name, spec in fallbacks:
+            self.counters.host_fallbacks += 1
+            results[qi][name] = self._scan_set(eval_tv(spec.pred, spec.table.stats))
+        return results
+
+    def run_batch(self, queries: Sequence, pipeline=None) -> List:
+        """Full pruning pipelines over a workload, filter stage batched.
+
+        Returns one ``PruningReport`` per query, identical to running
+        ``pipeline.run(q)`` per query with ``filter_mode="device"``.
+        """
+        from ..core.flow import PruningPipeline
+        if pipeline is None:
+            pipeline = PruningPipeline(filter_mode="device", service=self)
+        # Only batch the filter stage when the pipeline itself declares the
+        # device path — a host/adaptive pipeline keeps its own semantics.
+        if (pipeline.enable_filter and not pipeline.adaptive
+                and pipeline.filter_mode == "device"):
+            filter_sets = self.prune_batch(queries)
+        else:
+            filter_sets = [None] * len(queries)
+        return [pipeline.run(q, filter_sets=filter_sets[i])
+                for i, q in enumerate(queries)]

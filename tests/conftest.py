@@ -1,0 +1,12 @@
+"""Pytest bootstrap: make the hypothesis fallback shim available before any
+test module runs its ``from hypothesis import ...`` line (helpers.py holds
+the shim so it is importable outside pytest too)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from helpers import install_hypothesis_shim  # noqa: E402
+
+install_hypothesis_shim()

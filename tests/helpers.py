@@ -1,12 +1,141 @@
-"""Shared test utilities: small table builders and hypothesis strategies."""
+"""Shared test utilities: small table builders and hypothesis strategies.
+
+When the real ``hypothesis`` package is unavailable (offline containers),
+``install_hypothesis_shim`` registers a minimal fixed-example stand-in in
+``sys.modules`` so the suite still collects and runs everywhere.  The shim
+draws a bounded number of deterministic pseudo-random examples per test
+(no shrinking, no database) — property coverage is reduced, not absent.
+``tests/conftest.py`` installs it before any test module imports.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-from hypothesis import strategies as st
+import functools
+import inspect
+import os
+import random
+import sys
+import types
 
-from repro.core import expr as E
-from repro.data.table import Table
+import numpy as np
+
+
+def _build_hypothesis_shim() -> types.ModuleType:
+    """A tiny, deterministic subset of the hypothesis API.
+
+    Supports exactly what this suite uses: ``given`` (keyword strategies,
+    ``...`` meaning infer-from-annotation), ``settings(max_examples,
+    deadline)``, and ``strategies.{integers, booleans, sampled_from,
+    lists, composite}``.
+    """
+
+    class Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example(self, rnd: random.Random):
+            return self._draw_fn(rnd)
+
+    def integers(min_value, max_value):
+        return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    def booleans():
+        return Strategy(lambda rnd: rnd.random() < 0.5)
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            return [elements.example(rnd) for _ in range(n)]
+        return Strategy(draw)
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            def draw_with(rnd):
+                return fn(lambda strat: strat.example(rnd), *args, **kwargs)
+            return Strategy(draw_with)
+        return builder
+
+    def _infer(annotation):
+        if annotation is bool:
+            return booleans()
+        if annotation is int:
+            return integers(0, 100)
+        if annotation is float:
+            return Strategy(lambda rnd: rnd.uniform(-100.0, 100.0))
+        raise TypeError(f"shim cannot infer a strategy for {annotation!r}")
+
+    _default_examples = int(os.environ.get("HYPOTHESIS_SHIM_MAX_EXAMPLES", 8))
+
+    def given(**strategy_kwargs):
+        def deco(test_fn):
+            sig = inspect.signature(test_fn)
+            strategies = {}
+            for name, strat in strategy_kwargs.items():
+                if strat is Ellipsis:
+                    strat = _infer(sig.parameters[name].annotation)
+                strategies[name] = strat
+
+            def wrapper(*args, **kwargs):
+                limit = getattr(wrapper, "_shim_max_examples", None)
+                n = min(limit or _default_examples, _default_examples)
+                for i in range(n):
+                    rnd = random.Random(f"{test_fn.__qualname__}:{i}")
+                    drawn = {k: s.example(rnd) for k, s in strategies.items()}
+                    test_fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = test_fn.__name__
+            wrapper.__qualname__ = test_fn.__qualname__
+            wrapper.__doc__ = test_fn.__doc__
+            wrapper.__module__ = test_fn.__module__
+            # Hide the drawn parameters from pytest's fixture resolution.
+            kept = [p for p in sig.parameters.values() if p.name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            wrapper.hypothesis_shim = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = "fixed-example fallback shim (real hypothesis unavailable)"
+    mod.given = given
+    mod.settings = settings
+    mod.is_shim = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.booleans = booleans
+    st_mod.sampled_from = sampled_from
+    st_mod.lists = lists
+    st_mod.composite = composite
+    mod.strategies = st_mod
+    return mod
+
+
+def install_hypothesis_shim() -> None:
+    """Register the shim in sys.modules iff hypothesis is not importable."""
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        mod = _build_hypothesis_shim()
+        sys.modules["hypothesis"] = mod
+        sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+install_hypothesis_shim()
+
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import expr as E  # noqa: E402
+from repro.data.table import Table  # noqa: E402
 
 STR_DOMAIN = [
     "Alpine Chough", "Alpine Ibex", "Alpine Marmot", "Alpine Salamander",
