@@ -1,0 +1,189 @@
+"""Unified runtime pruning engine vs the per-query host loop.
+
+The technique-executor engine's pitch (ISSUE 2): filter, JOIN, and top-k
+pruning share one device-resident metadata plane, and a workload's
+pruning runs as a handful of batched launches per *stage* — bounded by
+the number of distinct tables, not queries.  This bench drives a mixed
+filter+join+topk workload through both regimes over a P x Q grid:
+
+  * Regime A — per-query host loop: ``PruningPipeline()`` (host mode),
+    one full pipeline per query (the classic engine);
+  * Regime B — batched engine: ``PruningService.run_batch`` with a
+    device pipeline — filter ranges, join overlap, and top-k boundary
+    init each batched per table group against resident planes.
+
+Run on the jnp ref backend (the container has no TPU); the overheads
+being amortized — per-query predicate evaluation over [P] stats, staging,
+Python dispatch — are real on every backend.  Emits machine-readable
+``BENCH_runtime_prune.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core.flow import JoinSpec, PruningPipeline, Query, TableScanSpec
+from repro.data.generator import make_events_table, make_users_table
+from repro.serve.prune_service import PruningService
+
+from .common import emit
+
+# This module writes its own richer JSON artifact (grid + acceptance);
+# benchmarks/run.py sees this flag and skips its generic per-module JSON.
+EMITS_OWN_JSON = True
+
+GRID_P = (10_000, 100_000)
+GRID_Q = (16, 64, 256)
+TS_MAX = 10_000_000
+LOOP_SAMPLE = 48      # host per-query cost is constant: time a sample,
+                      # extrapolate to Q (keeps big cells sane)
+
+_TABLES = {}
+
+
+def tables(P: int):
+    """One big fact table with P partitions + a small dimension table."""
+    if P not in _TABLES:
+        rng = np.random.default_rng(7)
+        events = make_events_table(rng, n_rows=P, rows_per_partition=1,
+                                   ts_clustering=0.995, user_clustering=0.99)
+        users = make_users_table(rng, n_rows=2000, rows_per_partition=100)
+        _TABLES[P] = (events, users)
+    return _TABLES[P]
+
+
+def make_queries(Q: int, events, users, rng):
+    """Mixed workload: ~62% filter, ~25% join, ~12% top-k queries
+    (runtime techniques oversampled vs the paper's Table 1 so the join
+    and top-k stages are well represented in every cell).
+
+    Predicates are production-style tight windows (the paper's Sec. 1
+    point: real filters are very selective), so runtime stages operate on
+    already-small scan sets and the per-query cost is dominated by the
+    metadata math this engine batches.
+    """
+    qs = []
+    for i in range(Q):
+        frac = float(np.exp(rng.normal(np.log(0.004), 1.0)))
+        lo = TS_MAX * (1 - min(frac, 1.0))
+        # int/dictionary columns only: their bounds snap to integers and
+        # cast to f32 exactly, so the device path proves the same FULL
+        # matches as the host oracle (core.device_stats contract).
+        pred = (E.col("ts") >= lo) & (E.col("ts") <= TS_MAX) \
+            & (E.col("user_id") >= 1000) & (E.col("num_sightings") >= 0)
+        kind = i % 8
+        if kind in (2, 6):
+            lo_a = int(rng.integers(20, 75))
+            upred = (E.col("age") >= lo_a) & (E.col("age") <= lo_a + 4)
+            qs.append(Query(
+                scans={"events": TableScanSpec(events, pred),
+                       "users": TableScanSpec(users, upred)},
+                join=JoinSpec("users", "events", "id", "user_id")))
+        elif kind == 4:
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)},
+                            limit=int(rng.integers(5, 20)),
+                            order_by=("events", "num_sightings", True)))
+        else:
+            qs.append(Query(scans={"events": TableScanSpec(events, pred)}))
+    return qs
+
+
+def _time(fn, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
+        json_path: str = "BENCH_runtime_prune.json"):
+    rng = np.random.default_rng(0)
+    rows, cells = [], []
+    for P in grid_p:
+        events, users = tables(P)
+        repeats = 3 if P <= 10_000 else 1
+        for Q in grid_q:
+            queries = make_queries(Q, events, users, rng)
+
+            # Regime A — per-query host loop (full pipelines, host mode).
+            host_pipe = PruningPipeline()
+            sample = queries[:min(Q, LOOP_SAMPLE)]
+
+            def loop():
+                for q in sample:
+                    host_pipe.run(q)
+
+            loop()                            # warm numpy/dispatch caches
+            s_loop = _time(loop, repeats) / len(sample)   # sec per query
+            qps_loop = 1.0 / s_loop
+
+            # Regime B — batched engine: all device-eligible stages packed
+            # per table group against resident planes.
+            svc = PruningService(mode="ref")
+            pipe = PruningPipeline(filter_mode="device", service=svc)
+
+            def batched():
+                svc.run_batch(queries, pipe)
+
+            # warm jit caches + planes; the warm-up reports already carry
+            # this workload's per-batch counter delta (launches repeat
+            # identically every batch — only staging is cached)
+            stage_launches = svc.run_batch(queries, pipe)[0].counters[
+                "technique"]
+            s_batched = _time(batched, repeats)
+            qps_batched = Q / s_batched
+
+            cell = dict(
+                P=P, Q=Q,
+                us_per_query_loop=s_loop * 1e6,
+                us_total_batched=s_batched * 1e6,
+                qps_loop=qps_loop,
+                qps_batched=qps_batched,
+                speedup=qps_batched / qps_loop,
+                launches=stage_launches,
+            )
+            cells.append(cell)
+            rows.append((
+                f"runtime_prune_P{P}_Q{Q}",
+                s_batched * 1e6,
+                f"qps_batched={qps_batched:.0f} qps_loop={qps_loop:.0f} "
+                f"x{cell['speedup']:.1f}",
+            ))
+    if csv:
+        emit(rows)
+    if json_path:
+        accept = [c for c in cells if c["P"] == 100_000 and c["Q"] == 256]
+        payload = dict(
+            bench="runtime_prune",
+            backend="ref",
+            workload="mixed filter+join+topk",
+            loop_sample=LOOP_SAMPLE,
+            grid=cells,
+            acceptance=dict(
+                target="qps_batched >= 5x qps_loop at Q=256, P=100k",
+                speedup=accept[0]["speedup"] if accept else None,
+                passed=bool(accept and accept[0]["speedup"] >= 5.0),
+            ),
+        )
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows, cells
+
+
+def main():
+    # BENCH_JSON_DIR is set by benchmarks/run.py from --json-dir; empty
+    # means JSON emission is disabled.  Standalone runs default to CWD.
+    json_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    run(json_path=os.path.join(json_dir, "BENCH_runtime_prune.json")
+        if json_dir else "")
+
+
+if __name__ == "__main__":
+    main()

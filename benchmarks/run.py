@@ -34,6 +34,7 @@ MODULES = [
     "sec82_predicate_cache",
     "kernels_bench",
     "bench_batched_prune",
+    "bench_runtime_prune",
 ]
 
 

@@ -14,6 +14,11 @@ metadata indexes):
   * DML invalidates: ``insert_partitions`` / any version bump produces a
     different key, and the stale entry for the same table is dropped.
   * Eviction is always safe (a miss simply re-stages).
+  * Runtime techniques ride the same cache: per-column **join-key planes**
+    (``join_key_plane``) and **block-top-k planes** (``block_topk_plane``)
+    are staged once per table identity and column, with column-granular
+    ``notify_update`` invalidation — see the ``DeviceStatsCache`` class
+    docstring.
 
 Precision contract (the single place stats are downcast to f32)
 ---------------------------------------------------------------
@@ -194,6 +199,9 @@ class DeviceStats:
         )
 
 
+KPLANE = 64   # block-top-k plane width: values kept per partition
+
+
 class DeviceStatsCache:
     """Once-per-table-version staging of metadata planes, LRU-bounded.
 
@@ -204,13 +212,39 @@ class DeviceStatsCache:
     new data — from the object that was staged, so a stale plane can
     never serve it.  Superseded same-table (same-uid) entries are dropped
     eagerly; entries of dead rebuilt tables age out via the LRU bound.
+
+    Runtime-technique planes (PR 2)
+    -------------------------------
+    Alongside the [C, P] min/max/demote planes the cache stages two
+    *per-column* plane families for the runtime techniques:
+
+      * **join-key planes** (``join_key_plane``): the key column's widened
+        f32 [P] min/max rows, consumed by ``join_overlap_batched``;
+      * **block-top-k planes** (``block_topk_plane``): [P, KPLANE] rows of
+        the column's per-partition top-K *signed* values (sign = +1 DESC /
+        -1 ASC, nulls excluded, f64 -> f32 rounded toward -inf so every
+        stored value is <= the true row value — a boundary derived from
+        them is always witnessed), consumed by ``topk_init_batched``.
+
+    Both follow the same TableVersion invalidation discipline through the
+    DML hooks, with one refinement: ``on_update(table, column)`` drops the
+    [C, P] planes (they carry every column) but only the *matching
+    column's* join-key / block-top-k planes — an update to column X cannot
+    change column Y's values, so Y's planes stay resident.
     """
 
-    def __init__(self, max_entries: int = 16):
+    def __init__(self, max_entries: int = 16, max_planes: int = 64):
         self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        # (name, uid, col) -> (pmin [P], pmax [P]) widened f32 device rows
+        self.key_planes: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        # (name, uid, col, desc, k) -> [P, k] signed block-top-k device rows
+        self.topk_planes: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
+        self.max_planes = max_planes
+        self.plane_hits = 0
+        self.plane_misses = 0
 
     @staticmethod
     def _key(table, tv: Optional[TableVersion]) -> Tuple:
@@ -243,10 +277,82 @@ class DeviceStatsCache:
             self.entries.popitem(last=False)
         return e
 
-    def invalidate(self, table_name: str) -> None:
+    # ---- runtime-technique planes --------------------------------------
+
+    def _plane_get(self, store: "OrderedDict", key: Tuple):
+        e = store.get(key)
+        if e is not None:
+            self.plane_hits += 1
+            store.move_to_end(key)
+        return e
+
+    def _plane_put(self, store: "OrderedDict", key: Tuple, entry):
+        self.plane_misses += 1
+        store[key] = entry
+        while len(store) > self.max_planes:
+            store.popitem(last=False)
+        return entry
+
+    def join_key_plane(self, table, key_col: str) -> Tuple:
+        """The key column's resident (pmin, pmax) [P] f32 rows (widened).
+
+        Staged once per (table identity, column); consumed by the batched
+        join-overlap kernel.  Clamped to finite f32 like the [C, P]
+        planes, so +inf distinct-key padding can never produce a hit.
+        """
+        key = (table.name, table.stats.uid, key_col)
+        e = self._plane_get(self.key_planes, key)
+        if e is not None:
+            return e
+        pmin = np.clip(round_down_f32(table.stats.col_min(key_col)),
+                       -_F32_MAX, _F32_MAX).astype(np.float32)
+        pmax = np.clip(round_up_f32(table.stats.col_max(key_col)),
+                       -_F32_MAX, _F32_MAX).astype(np.float32)
+        return self._plane_put(self.key_planes, key,
+                               (jnp.asarray(pmin), jnp.asarray(pmax)))
+
+    def block_topk_plane(self, table, order_col: str, desc: bool,
+                         k_plane: int = KPLANE) -> jnp.ndarray:
+        """The column's resident [P, k_plane] signed block-top-k rows.
+
+        Row p holds partition p's k_plane largest ``sign * value`` entries
+        (desc per row, -inf padded, nulls excluded).  Values are rounded
+        toward -inf in the signed domain, so every stored entry is <= the
+        true value of an actual non-null row — any boundary taken from
+        these rows is a *witnessed* Sec. 5.4 boundary.
+        """
+        key = (table.name, table.stats.uid, order_col, bool(desc),
+               int(k_plane))
+        e = self._plane_get(self.topk_planes, key)
+        if e is not None:
+            return e
+        from ..kernels.ops import build_block_topk  # lazy: ops imports us
+        sign = 1.0 if desc else -1.0
+        sv = round_down_f32(sign * np.asarray(table.data[order_col],
+                                              dtype=np.float64))
+        nm = table.nulls.get(order_col)
+        mask = None if nm is None else ~np.asarray(nm, dtype=bool)
+        rows = build_block_topk(sv.astype(np.float32), table.part_bounds,
+                                int(k_plane), mask=mask)
+        return self._plane_put(self.topk_planes, key, jnp.asarray(rows))
+
+    def invalidate(self, table_name: str, column: Optional[str] = None
+                   ) -> None:
+        """Drop staged planes for a table.
+
+        ``column=None`` drops everything (insert/delete semantics); a
+        column drops the [C, P] planes (they carry every column's stats)
+        plus only that column's join-key / block-top-k planes.
+        """
         stale = [k for k in self.entries if k[0] == table_name]
         for k in stale:
             del self.entries[k]
+        for store in (self.key_planes, self.topk_planes):
+            stale = [k for k in store
+                     if k[0] == table_name
+                     and (column is None or k[2] == column)]
+            for k in stale:
+                del store[k]
 
     # ---- DML hooks (mirror predicate_cache's safety analysis; staging a
     # stale stats plane is never *unsafe* for NO_MATCH only if stats were
@@ -259,7 +365,10 @@ class DeviceStatsCache:
         self.invalidate(table_name)
 
     def on_update(self, table_name: str, column: str) -> None:
-        self.invalidate(table_name)
+        # Updates are column-scoped: the [C, P] stat planes must re-stage
+        # (they include the updated column), while the other columns'
+        # join-key / block-top-k planes remain valid and stay resident.
+        self.invalidate(table_name, column=column)
 
     @property
     def hit_rate(self) -> float:
@@ -268,4 +377,8 @@ class DeviceStatsCache:
 
     @property
     def resident_bytes(self) -> int:
-        return sum(e.nbytes for e in self.entries.values())
+        total = sum(e.nbytes for e in self.entries.values())
+        total += sum(int(a.nbytes) + int(b.nbytes)
+                     for a, b in self.key_planes.values())
+        total += sum(int(r.nbytes) for r in self.topk_planes.values())
+        return total

@@ -154,8 +154,16 @@ def prune_probe(
     key_col: str,
     summary: BuildSummary,
     enum_limit: int = 1024,
+    distinct_hit: Optional[np.ndarray] = None,
 ) -> JoinPruneResult:
-    """Steps 3+4: overlap the summary with probe partitions' min/max."""
+    """Steps 3+4: overlap the summary with probe partitions' min/max.
+
+    ``distinct_hit`` injects a precomputed distinct-key overlap result
+    (bool per scan entry) in place of the host searchsorted — the device
+    engine computes it with the batched ``join_overlap_batched`` kernel
+    over the resident join-key plane.  It must be a superset-safe overlap
+    (never False for a partition whose range contains a build key).
+    """
     before = len(scan)
     pmin = stats.col_min(key_col)[scan.part_ids]
     pmax = stats.col_max(key_col)[scan.part_ids]
@@ -172,10 +180,13 @@ def prune_probe(
     n_distinct = n_bloom = 0
 
     if summary.distinct is not None:
-        d = summary.distinct
-        lo = np.searchsorted(d, pmin, side="left")
-        hi = np.searchsorted(d, pmax, side="right")
-        hit = hi > lo
+        if distinct_hit is not None:
+            hit = np.asarray(distinct_hit, dtype=bool)
+        else:
+            d = summary.distinct
+            lo = np.searchsorted(d, pmin, side="left")
+            hi = np.searchsorted(d, pmax, side="right")
+            hit = hi > lo
         n_distinct = int((keep & ~hit).sum())
         keep &= hit
     elif summary.bloom is not None:

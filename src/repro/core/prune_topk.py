@@ -60,9 +60,17 @@ class TopKResult:
         return np.unique(self.sources)
 
 
-def _signed_block_max(stats: PartitionStats, order_col: str, sign: float) -> np.ndarray:
+def _signed_block_max(stats: PartitionStats, order_col: str, sign: float,
+                      part_ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-partition ``max(sign * value)``; ``part_ids`` restricts the
+    gather to a scan subset (O(|scan|), not O(P) — the engine only ever
+    consults the partitions it may fetch)."""
     ci = stats.col_id(order_col)
-    return np.where(sign > 0, stats.maxs[:, ci], -stats.mins[:, ci])
+    if part_ids is None:
+        return np.where(sign > 0, stats.maxs[:, ci], -stats.mins[:, ci])
+    if sign > 0:
+        return stats.maxs[part_ids, ci]
+    return -stats.mins[part_ids, ci]
 
 
 def order_partitions(
@@ -80,7 +88,7 @@ def order_partitions(
         rng = rng or np.random.default_rng(0)
         return scan.reorder(rng.permutation(len(scan)))
     if strategy == "sort":
-        bmax = _signed_block_max(stats, order_col, sign)[scan.part_ids]
+        bmax = _signed_block_max(stats, order_col, sign, scan.part_ids)
         return scan.reorder(np.argsort(-bmax, kind="stable"))
     raise ValueError(f"unknown strategy {strategy!r}")
 
@@ -133,6 +141,7 @@ def run_topk(
     use_upfront_init: bool = False,
     rng: Optional[np.random.Generator] = None,
     extra_mask_fn=None,
+    b_init_floor: float = -np.inf,
 ) -> TopKResult:
     """Execute a top-k scan with boundary-value partition pruning.
 
@@ -141,6 +150,14 @@ def run_topk(
     the heap).  Note: when an extra mask is present, Sec. 5.4 upfront
     initialization is disabled — fully-matching only certifies the scan's
     own predicate, not the join's survival.
+
+    ``b_init_floor`` lets a caller strengthen the upfront boundary with an
+    externally computed one (signed domain).  The caller must guarantee it
+    is a *witnessed* Sec. 5.4 boundary — k matching rows >= the floor must
+    exist — e.g. the device plane's boundary init, which takes the k-th
+    largest value over fully-matching partitions' resident block-top-k
+    rows.  Like the built-in init, it is ignored when an extra mask is
+    present (fully-matching does not certify the mask's survival).
     """
     stats = table.stats
     sign = 1.0 if desc else -1.0
@@ -151,20 +168,28 @@ def run_topk(
         if use_upfront_init and extra_mask_fn is None
         else -np.inf
     )
+    if extra_mask_fn is None:
+        b_init = max(b_init, float(b_init_floor))
 
     heap = np.empty(0)  # signed values, sorted descending
     heap_src = np.empty(0, dtype=np.int64)
-    scanned, skipped = [], []
     rows_scanned = 0
-    block_max = _signed_block_max(stats, order_col, sign)
+    block_max = _signed_block_max(stats, order_col, sign, scan.part_ids)
 
-    for pid in scan.part_ids:
-        bm = block_max[pid]
+    # Vectorized pre-skip: eff = max(b_init, h_kth) >= b_init throughout the
+    # loop, so a partition with block_max < b_init is skipped no matter how
+    # the heap evolves — drop them from the Python loop in one shot (same
+    # skip set, same heap; skip order is reconstructed positionally).
+    skip_flag = np.asarray(block_max < b_init)
+    scanned: list = []
+    for pos in np.where(~skip_flag)[0]:
+        pid = scan.part_ids[pos]
+        bm = block_max[pos]
         heap_full = len(heap) >= k
         h_kth = heap[k - 1] if heap_full else -np.inf
         eff = max(b_init, h_kth)
         if bm < eff or (heap_full and bm <= h_kth):
-            skipped.append(pid)
+            skip_flag[pos] = True
             continue
         ctx = table.partition_ctx(int(pid))
         mask = matches(pred, ctx) if pred is not None else np.ones(ctx.n, dtype=bool)
@@ -184,6 +209,7 @@ def run_topk(
             heap_src = srcs[order_ix]
 
     total = len(scan)
+    skipped = scan.part_ids[skip_flag]
     ratio = len(skipped) / total if total else 0.0
     return TopKResult(
         values=sign * heap,

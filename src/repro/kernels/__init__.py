@@ -5,7 +5,11 @@ Pruning hot spots (the paper's engine):
   minmax_prune_batched — Q queries x K ranges x P partitions in one launch,
                          against the resident metadata plane (device_stats)
   topk_boundary        — WAND-style boundary scan over block top-k rows (Sec. 5)
+  topk_init_batched    — Q queries' upfront boundaries (Sec. 5.4) over the
+                         resident block-top-k plane in one launch
   join_overlap         — distinct-keys vs partition-range overlap (Sec. 6)
+  join_overlap_batched — Q build summaries x P probe partitions against the
+                         resident join-key plane in one launch
 LM hot spot:
   flash_attention      — causal online-softmax attention (prefill compute)
 
@@ -16,10 +20,11 @@ ref.py.
 
 from . import ops, ref
 from .flash_attention import flash_attention
-from .join_overlap import join_overlap
+from .join_overlap import join_overlap, join_overlap_batched
 from .minmax_prune import minmax_prune
 from .minmax_prune_batched import minmax_prune_batched
-from .topk_boundary import topk_boundary
+from .topk_boundary import topk_boundary, topk_init_batched
 
 __all__ = ["ops", "ref", "minmax_prune", "minmax_prune_batched",
-           "topk_boundary", "join_overlap", "flash_attention"]
+           "topk_boundary", "topk_init_batched", "join_overlap",
+           "join_overlap_batched", "flash_attention"]

@@ -14,6 +14,12 @@ while the partition block's accumulator is revisited (grid is
 
 Pad value for the distinct list is NaN: NaN compares false against every
 bound, so padding never produces a hit.
+
+``join_overlap_batched`` is the workload-scale variant: Q queries' distinct
+lists (packed into power-of-two buckets, +inf padded) against the table's
+*resident* join-key plane (core/device_stats.py) in one launch — queries on
+the sublane dim like minmax_prune_batched, so a table group's JOIN pruning
+costs one launch regardless of the number of queries.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ from jax.experimental import pallas as pl
 
 BLOCK_P = 1024
 BLOCK_D = 2048
+BLOCK_QB = 8     # queries per tile in the batched kernel (f32 sublane height)
 
 
 def _join_overlap_kernel(pmin_ref, pmax_ref, dist_ref, hit_ref):
@@ -38,6 +45,71 @@ def _join_overlap_kernel(pmin_ref, pmax_ref, dist_ref, hit_ref):
     d = dist_ref[0, :]             # [BD]
     inside = (d[None, :] >= pmin[:, None]) & (d[None, :] <= pmax[:, None])
     hit_ref[...] |= jnp.any(inside, axis=1).astype(jnp.int32)[None, :]
+
+
+def _join_overlap_batched_kernel(dist_ref, pmin_ref, pmax_ref, hit_ref):
+    Db = dist_ref.shape[0]
+    BQ = dist_ref.shape[1]
+    pmin = pmin_ref[0, :]          # [BP]
+    pmax = pmax_ref[0, :]          # [BP]
+    BP = pmin.shape[0]
+
+    def body(d, hit):
+        dk = dist_ref[d, :][:, None]                       # [BQ, 1]
+        inside = (dk >= pmin[None, :]) & (dk <= pmax[None, :])
+        return hit | inside.astype(jnp.int32)
+
+    hit = jax.lax.fori_loop(0, Db, body, jnp.zeros((BQ, BP), jnp.int32))
+    hit_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def join_overlap_batched(
+    dist: jax.Array,     # [Db, Q] f32 distinct build keys per query,
+                         #         +inf padded (keys on the sublane dim)
+    pmin: jax.Array,     # [P] f32 resident probe key-column minima (widened,
+                         #         FINITE — core.device_stats clamps ±inf)
+    pmax: jax.Array,     # [P] f32 resident probe key-column maxima (widened)
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched JOIN overlap: Q build summaries x P probe partitions.
+
+    One launch answers every query of a table group against the resident
+    join-key plane — the multi-query analogue of ``join_overlap``, with
+    distinct keys packed into power-of-two Db buckets (ops.d_bucket, like
+    the K-bucket scheme of minmax_prune_batched) so jit recompiles stay
+    bounded.  Padding is ``+inf``: with the plane clamped to finite f32,
+    ``+inf <= pmax`` is always False, so a pad key never produces a hit
+    (and an all-pad query row yields an all-zero hit row, sliced off).
+
+    Returns hit [Q, P] int32 (0 -> partition is prunable for that query).
+    """
+    Db, Q = dist.shape
+    P = pmin.shape[0]
+    pad_q = (-Q) % BLOCK_QB
+    if pad_q:
+        dist = jnp.pad(dist, ((0, 0), (0, pad_q)), constant_values=jnp.inf)
+    pad_p = (-P) % BLOCK_P
+    if pad_p:
+        # Empty finite intervals, like minmax_prune_batched's P padding.
+        fmax = float(jnp.finfo(jnp.float32).max)
+        pmin = jnp.pad(pmin, (0, pad_p), constant_values=fmax)
+        pmax = jnp.pad(pmax, (0, pad_p), constant_values=-fmax)
+    Qp, Pp = Q + pad_q, P + pad_p
+    grid = (Qp // BLOCK_QB, Pp // BLOCK_P)
+    hit = pl.pallas_call(
+        _join_overlap_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Db, BLOCK_QB), lambda i, j: (0, i)),
+            pl.BlockSpec((1, BLOCK_P), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_P), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_QB, BLOCK_P), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Pp), jnp.int32),
+        interpret=interpret,
+    )(dist, pmin[None, :], pmax[None, :])
+    return hit[:Q, :P]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

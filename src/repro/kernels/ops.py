@@ -40,10 +40,10 @@ from ..core.device_stats import (DeviceStats, cast_bounds_f32, cast_stats_f32,
                                  snap_bounds_integral)
 from ..core.metadata import PartitionStats
 from . import ref
-from .join_overlap import join_overlap
+from .join_overlap import join_overlap, join_overlap_batched
 from .minmax_prune import minmax_prune
 from .minmax_prune_batched import BLOCK_Q, minmax_prune_batched
-from .topk_boundary import topk_boundary
+from .topk_boundary import topk_boundary, topk_init_batched
 
 # Peak elements per gathered [Q, P_slab] plane on the jnp ref path; keeps
 # the no-Pallas fallback memory-bounded for huge P without touching the
@@ -74,6 +74,16 @@ def k_bucket(k: int) -> int:
 def q_bucket(q: int) -> int:
     """Query-count bucket: next power of two >= max(q, BLOCK_Q)."""
     return _pow2_at_least(max(q, 1), floor=BLOCK_Q)
+
+
+def d_bucket(d: int) -> int:
+    """Distinct-key-count bucket: next power of two >= max(d, 8).
+
+    Batched join overlap pads each query's distinct list up to the bucket
+    with +inf no-op keys, so jit recompiles stay bounded — the same scheme
+    as ``k_bucket`` for constraint counts.
+    """
+    return _pow2_at_least(max(d, 1), floor=8)
 
 
 # ---------------------------------------------------------------------------
@@ -301,3 +311,119 @@ def join_overlap_device(
         hit = join_overlap(pmin, pmax, d,
                            interpret=(mode == "interpret") or not _on_tpu())
     return np.asarray(hit)
+
+
+# ---------------------------------------------------------------------------
+# Batched runtime-technique paths (resident join-key / block-top-k planes)
+# ---------------------------------------------------------------------------
+
+def pack_distinct(
+    distinct_lists: Sequence[np.ndarray],
+) -> np.ndarray:
+    """Pack per-query sorted distinct keys into the [Db, Qb] kernel layout.
+
+    Db/Qb are power-of-two buckets (``d_bucket`` / ``q_bucket``); padding
+    is +inf — sorted last (the ref path binary-searches each column) and
+    never inside a finite range (the kernel path compares directly).
+    """
+    Q = len(distinct_lists)
+    Db = d_bucket(max((len(d) for d in distinct_lists), default=1))
+    Qb = q_bucket(Q)
+    dist = np.full((Db, Qb), np.inf, dtype=np.float32)
+    for qi, d in enumerate(distinct_lists):
+        dist[: len(d), qi] = np.asarray(d, dtype=np.float32)
+    return dist
+
+
+def join_overlap_batched_device(
+    distinct_lists: Sequence[np.ndarray],
+    pmin: jnp.ndarray,       # [P] resident f32 key-column minima (widened)
+    pmax: jnp.ndarray,       # [P] resident f32 key-column maxima (widened)
+    mode: str = "auto",
+    part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+) -> np.ndarray:
+    """hit [Q, P] int32 — Q build summaries vs the resident key plane.
+
+    Row q equals ``join_overlap_device`` for query q's distinct list; one
+    launch covers the whole table group.  The f32 key cast is round-to-
+    nearest, which is monotone, so a key inside a partition's true f64
+    range is always inside the *widened* resident range — the device path
+    can keep extra partitions (degrading pruning) but never prunes a
+    partition containing a joinable key.
+
+    ``part_ids_lists`` optionally names the partitions each query will
+    actually consult (its current scan set).  The kernel path ignores it —
+    the resident plane is evaluated dense, that is the batched design —
+    but the no-Pallas fallback restricts its C-speed searchsorted to those
+    positions (other entries are 0 and must not be read).
+    """
+    Q = len(distinct_lists)
+    P = int(pmin.shape[0])
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        # np.asarray of a CPU-backed jax array is a view — the resident
+        # plane is not copied.  A key k32 hits [pmin, pmax] iff
+        # searchsorted brackets it: identical counts to the jnp oracle.
+        pmin_h = np.asarray(pmin)
+        pmax_h = np.asarray(pmax)
+        hit = np.zeros((Q, P), dtype=np.int32)
+        for qi, d in enumerate(distinct_lists):
+            d32 = np.asarray(d, dtype=np.float32)
+            ids = None if part_ids_lists is None else part_ids_lists[qi]
+            lo_q = pmin_h if ids is None else pmin_h[ids]
+            hi_q = pmax_h if ids is None else pmax_h[ids]
+            lo = np.searchsorted(d32, lo_q, side="left")
+            hi = np.searchsorted(d32, hi_q, side="right")
+            row = (hi > lo).astype(np.int32)
+            if ids is None:
+                hit[qi] = row
+            else:
+                hit[qi, ids] = row
+        return hit
+    dist_d = jnp.asarray(pack_distinct(distinct_lists))
+    hit = np.asarray(join_overlap_batched(
+        dist_d, pmin, pmax,
+        interpret=(mode == "interpret") or not _on_tpu()))
+    return hit[:Q]
+
+
+def topk_init_batched_device(
+    plane: jnp.ndarray,      # [P, K] resident block-top-k rows (signed f32)
+    mask: np.ndarray,        # [Q, P] 1 where partition p is a candidate
+    k: int,
+    mode: str = "auto",
+) -> np.ndarray:
+    """heap [Q, k] f32 — per-query top-k over masked resident plane rows.
+
+    Query q's Sec. 5.4 upfront boundary for any effective kq <= k is
+    ``heap[q, kq - 1]`` (-inf when fewer than kq candidates exist).
+
+    The no-Pallas fallback exploits the masks' sparsity — candidate sets
+    (fully-matching partitions of selective queries) are tiny fractions
+    of P, so a gather + partition per query beats the kernel's dense
+    formulation on CPU (np.asarray of a CPU-backed jax array is a view,
+    so the resident plane is not copied).  Top-k is a pure selection, so
+    every path returns the identical value multiset per query.
+    """
+    mask = np.asarray(mask)
+    Q = int(mask.shape[0])
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        plane_np = np.asarray(plane)
+        heap = np.full((Q, k), -np.inf, dtype=np.float32)
+        for qi in range(Q):
+            ids = np.nonzero(mask[qi])[0]
+            if not ids.size:
+                continue
+            vals = plane_np[ids].ravel()
+            vals = vals[vals > -np.inf]
+            if not vals.size:
+                continue
+            if vals.size > k:
+                vals = np.partition(vals, vals.size - k)[-k:]
+            top = np.sort(vals)[::-1]
+            heap[qi, : top.size] = top
+        return heap
+    mask_d = jnp.asarray(mask.astype(np.float32).T)   # [P, Q]
+    heap = topk_init_batched(
+        plane, mask_d, k,
+        interpret=(mode == "interpret") or not _on_tpu())
+    return np.asarray(heap)

@@ -25,6 +25,13 @@ formulation (associative prefix merge) is discussed in DESIGN.md §6 and
 validated in the ref oracle.
 
 Values must be finite (the wrapper uses -inf as padding / null encoding).
+
+``topk_init_batched`` is the workload-scale boundary *initializer* (Sec.
+5.4): against the table's resident block-top-k plane (core/device_stats.py
+— [P, K] per-partition top-K rows, staged once per table version), one
+launch computes every query's upfront boundary as the k-th largest value
+over its fully-matching partitions' resident rows.  No per-query staging:
+only the [Q, P] candidate masks cross to the device per batch.
 """
 
 from __future__ import annotations
@@ -83,6 +90,95 @@ def _topk_boundary_kernel(binit_ref, rows_ref, skip_ref, heap_ref, scratch):
     scratch[0, :] = heap
     skip_ref[...] = skips[None, :]
     heap_ref[...] = heap[None, :]
+
+
+BLOCK_QI = 8     # queries per tile in the batched init kernel
+BLOCK_PI = 128   # partitions folded into the heaps per grid step
+
+
+def _merge_topk_rows(heap: jax.Array, rows: jax.Array, k: int) -> jax.Array:
+    """Row-wise top-k merge: heap [BQ, k] desc + rows [BQ, m] -> [BQ, k].
+
+    The batched analogue of ``_merge_topk``: rank selection via an
+    all-pairs comparison per query row, branch-free VPU work."""
+    cand = jnp.concatenate([heap, rows], axis=1)            # [BQ, n]
+    n = cand.shape[1]
+    ci = cand[:, :, None]                                   # value of i
+    cj = cand[:, None, :]                                   # value of j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (1, n, n), 1)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (1, n, n), 2)
+    rank = jnp.sum(((cj > ci) | ((cj == ci) & (jj < ii))).astype(jnp.int32),
+                   axis=2)                                  # [BQ, n]
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (1, k, n), 1)
+    sel = rank[:, None, :] == tgt                           # [BQ, k, n]
+    # where, not sel * cand: candidates are -inf-padded and 0 * -inf = NaN
+    # in eager IEEE semantics (jit happens to fold the one-hot away).
+    picked = jnp.where(sel, cand[:, None, :], jnp.zeros_like(cand)[:, None, :])
+    return jnp.sum(picked, axis=2)                          # [BQ, k]
+
+
+def _topk_init_kernel(plane_ref, mask_ref, heap_ref, scratch, *, k):
+    BP, K = plane_ref.shape
+    BQ = mask_ref.shape[1]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        scratch[...] = jnp.full_like(scratch, -jnp.inf)
+
+    def body(j, heap):
+        prow = plane_ref[j, :]                              # [K]
+        m = mask_ref[j, :]                                  # [BQ]
+        rows = jnp.where(m[:, None] > 0, prow[None, :], -jnp.inf)
+        return _merge_topk_rows(heap, rows, k)
+
+    heap = jax.lax.fori_loop(0, BP, body, scratch[...])
+    scratch[...] = heap
+    heap_ref[...] = heap
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_init_batched(
+    plane: jax.Array,     # [P, K] f32 resident block-top-k rows, -inf padded
+    mask: jax.Array,      # [P, Q] f32, 1.0 = candidate partition for query q
+    k: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-query top-k over masked unions of resident block-top-k rows.
+
+    Returns heap [Q, k] f32 descending (-inf padded): row q holds the k
+    largest plane values among partitions with ``mask[p, q] == 1`` — the
+    Sec. 5.4 upfront boundary for query q is ``heap[q, kq - 1]`` for any
+    kq <= k (a prefix of a larger heap is the exact smaller-k answer, so
+    one launch serves a whole group of queries with mixed k).
+
+    The partition dimension is blocked with the heaps carried across grid
+    steps in VMEM scratch, like ``topk_boundary``; queries ride the
+    sublane dim like ``minmax_prune_batched``.
+    """
+    P, K = plane.shape
+    Q = mask.shape[1]
+    pad_q = (-Q) % BLOCK_QI
+    if pad_q:
+        mask = jnp.pad(mask, ((0, 0), (0, pad_q)))
+    pad_p = (-P) % BLOCK_PI
+    if pad_p:
+        plane = jnp.pad(plane, ((0, pad_p), (0, 0)), constant_values=-jnp.inf)
+        mask = jnp.pad(mask, ((0, pad_p), (0, 0)))
+    Qp, Pp = Q + pad_q, P + pad_p
+    grid = (Qp // BLOCK_QI, Pp // BLOCK_PI)
+    heap = pl.pallas_call(
+        functools.partial(_topk_init_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_PI, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_PI, BLOCK_QI), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_QI, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Qp, k), plane.dtype),
+        scratch_shapes=[pltpu.VMEM((BLOCK_QI, k), plane.dtype)],
+        interpret=interpret,
+    )(plane, mask)
+    return heap[:Q]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

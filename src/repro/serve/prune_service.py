@@ -1,28 +1,45 @@
-"""PruningService: the workload-facing entry point of the device plane.
+"""PruningService: the workload-facing engine of the device plane.
 
 A production metadata service (paper Sec. 2) answers pruning questions for
 *every* query of a heavy workload, not one query at a time.  This service
-accepts a batch of ``core.flow.Query`` objects and runs their filter
-pruning as a handful of batched kernel launches:
+accepts a batch of ``core.flow.Query`` objects and drives the pipeline's
+full **technique sequence** (filter -> LIMIT -> JOIN -> top-k) over them,
+batching every device-eligible stage per table group:
 
-  1. each scan's predicate is lowered to conjunctive ranges
-     (``extract_ranges``); non-lowerable predicates fall back to the host
-     evaluator per scan (counted, never wrong);
-  2. lowered scans are **grouped by table**; each table's metadata plane is
-     fetched from the ``DeviceStatsCache`` (staged once per table version,
-     an on-device gather afterwards);
-  3. one ``minmax_prune_batched`` launch per table group evaluates all of
-     its queries' constraints — Q on the sublane dim, constraints padded
-     into power-of-two K-buckets — and the resulting ``[Q, P]`` tv rows
-     are scattered back into per-query ``ScanSet``s.
+  * **filter** (``prune_batch``): each scan's predicate is lowered to
+    conjunctive ranges; lowered scans are grouped by table and evaluated
+    by one ``minmax_prune_batched`` launch per group against the resident
+    [C, P] planes (non-lowerable predicates fall back to the host
+    evaluator, counted, never wrong);
+  * **join** (``join_hit_batch``): build-side summaries stay host-side
+    (they are runtime values), but the distinct-key overlap against the
+    probe partitions runs as one ``join_overlap_batched`` launch per
+    (table, key column) group against the resident join-key plane;
+  * **top-k** (``topk_init_batch``): the Sec. 5.4 upfront boundary is
+    initialized as the k-th largest value over each query's
+    fully-matching partitions' resident block-top-k rows — one
+    ``topk_init_batched`` launch per (table, order column, direction)
+    group.
 
-``PruningPipeline(filter_mode="device")`` delegates its filter stage here
-(single-query batches share the same resident planes), and ``run_batch``
-drives whole pipelines over a workload with the filter stage batched.
+Kernel launches per stage are therefore bounded by the number of distinct
+tables (groups), not by the number of queries, and ``run_batch`` produces
+``PruningReport``s bit-identical to per-query ``PruningPipeline.run`` in
+the same mode (the batched launches evaluate exactly the same per-query
+math, packed).
+
+``PruningPipeline(filter_mode="device")`` delegates each stage here for
+single queries (Q=1 batches share the same resident planes).
+
+Counters: ``ServiceCounters`` tracks launches and host fallbacks both in
+aggregate and per technique (``counters.technique``), and ``run_batch``
+attaches a snapshot to every report (``PruningReport.counters``) so
+benchmarks can attribute speedups per stage.
 
 DML: route mutations through ``notify_insert / notify_delete /
 notify_update`` — they bump the table's ``TableVersion`` and invalidate
-the staged planes, so the next batch re-stages fresh metadata.
+the staged planes, so the next batch re-stages fresh metadata.  Updates
+are column-scoped: the join-key / block-top-k planes of *other* columns
+stay resident (see ``DeviceStatsCache``).
 """
 
 from __future__ import annotations
@@ -34,18 +51,54 @@ import numpy as np
 
 from ..core import expr as E
 from ..core.device_stats import DeviceStatsCache
-from ..core.metadata import NO_MATCH, ScanSet
+from ..core.metadata import FULL_MATCH, NO_MATCH, ScanSet
 from ..core.predicate_cache import TableVersion
 from ..core.prune_filter import eval_tv, extract_ranges
+from ..core.prune_join import BuildSummary
 from ..kernels import ops as kops
+
+# Boundary-init k cap: the kernel's rank-selection merge is quadratic in
+# (k bucket + KPLANE), so the per-step comparison tensor must stay well
+# inside VMEM — at 128 it is [8, 192, 192] (~1.2MB).  Larger k also gains
+# little from the plane (each partition contributes at most KPLANE=64
+# witnessed rows); such queries keep the host-only init.
+TOPK_INIT_MAX_K = 128
 
 
 @dataclasses.dataclass
 class ServiceCounters:
     queries: int = 0
     scans: int = 0
-    launches: int = 0          # batched kernel launches (per table group)
-    host_fallbacks: int = 0    # scans whose predicate didn't lower
+    launches: int = 0          # batched kernel launches, all techniques
+    host_fallbacks: int = 0    # host fallbacks, all techniques
+    # per-technique attribution: {'filter': {'launches': n, 'fallbacks': m}}
+    technique: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
+
+    def bump(self, tech: str, launches: int = 0, fallbacks: int = 0) -> None:
+        t = self.technique.setdefault(tech, dict(launches=0, fallbacks=0))
+        t["launches"] += launches
+        t["fallbacks"] += fallbacks
+        self.launches += launches
+        self.host_fallbacks += fallbacks
+
+    def snapshot(self) -> dict:
+        return dict(queries=self.queries, scans=self.scans,
+                    launches=self.launches,
+                    host_fallbacks=self.host_fallbacks,
+                    technique={k: dict(v) for k, v in self.technique.items()})
+
+    @staticmethod
+    def delta(before: dict, after: dict) -> dict:
+        """after - before of two snapshots: the activity in between."""
+        out = {k: after[k] - before[k]
+               for k in ("queries", "scans", "launches", "host_fallbacks")}
+        zero = dict(launches=0, fallbacks=0)
+        out["technique"] = {
+            t: {f: v - before["technique"].get(t, zero)[f]
+                for f, v in fields.items()}
+            for t, fields in after["technique"].items()}
+        return out
 
 
 class PruningService:
@@ -86,7 +139,7 @@ class PruningService:
             tv.version += 1
         self.cache.on_update(table_name, column)
 
-    # -- pruning ------------------------------------------------------------
+    # -- filter stage -------------------------------------------------------
 
     @staticmethod
     def _scan_set(tv: np.ndarray) -> ScanSet:
@@ -105,10 +158,10 @@ class PruningService:
         self.counters.scans += 1
         ranges = extract_ranges(spec.pred, spec.table.stats)
         if ranges is None:
-            self.counters.host_fallbacks += 1
+            self.counters.bump("filter", fallbacks=1)
             return None
         dstats = self.cache.get(spec.table, self.versions.get(spec.table.name))
-        self.counters.launches += 1
+        self.counters.bump("filter", launches=1)
         return kops.prune_ranges_batched_device([ranges], dstats, self.mode)[0]
 
     def prune_batch(self, queries: Sequence) -> List[Dict[str, ScanSet]]:
@@ -138,29 +191,135 @@ class PruningService:
             dstats = self.cache.get(table, self.versions.get(table.name))
             tv_rows = kops.prune_ranges_batched_device(
                 [ranges for _, _, ranges in jobs], dstats, self.mode)
-            self.counters.launches += 1
+            self.counters.bump("filter", launches=1)
             for (qi, name, _), tv in zip(jobs, tv_rows):
                 results[qi][name] = self._scan_set(tv)
         for qi, name, spec in fallbacks:
-            self.counters.host_fallbacks += 1
+            self.counters.bump("filter", fallbacks=1)
             results[qi][name] = self._scan_set(eval_tv(spec.pred, spec.table.stats))
         return results
 
+    # -- join stage ---------------------------------------------------------
+
+    @staticmethod
+    def join_device_eligible(summary: BuildSummary) -> bool:
+        """Can the distinct-key overlap run on the device plane?
+
+        Requires an exact distinct summary (Bloom summaries keep the host
+        matcher's narrow-range enumeration) whose keys stay finite in
+        f32; empty summaries are host short-circuits, not kernel work.
+        """
+        if summary.empty or summary.distinct is None:
+            return False
+        d32 = np.asarray(summary.distinct, dtype=np.float64).astype(np.float32)
+        return bool(np.isfinite(d32).all())
+
+    def join_hit_batch(self, table, key_col: str,
+                       summaries: Sequence[BuildSummary],
+                       part_ids: Optional[Sequence[np.ndarray]] = None
+                       ) -> np.ndarray:
+        """hit [G, P] for a (table, key column) group — one launch.
+
+        ``part_ids`` optionally restricts the no-Pallas fallback to each
+        query's scan set (entries outside it are 0 and must not be read);
+        the kernel path always evaluates the resident plane dense.
+        """
+        pmin, pmax = self.cache.join_key_plane(table, key_col)
+        hit = kops.join_overlap_batched_device(
+            [s.distinct for s in summaries], pmin, pmax, self.mode,
+            part_ids_lists=part_ids)
+        self.counters.bump("join", launches=1)
+        return hit
+
+    def join_hit(self, table, key_col: str, summary: BuildSummary,
+                 part_ids: Optional[np.ndarray] = None
+                 ) -> Optional[np.ndarray]:
+        """hit [P] for one query, or None -> host path (counted unless the
+        summary is empty, which the host handles as a trivial wipe)."""
+        if not self.join_device_eligible(summary):
+            if not summary.empty:
+                self.counters.bump("join", fallbacks=1)
+            return None
+        return self.join_hit_batch(
+            table, key_col, [summary],
+            part_ids=None if part_ids is None else [part_ids])[0]
+
+    # -- top-k stage --------------------------------------------------------
+
+    def topk_init_batch(self, table, order_col: str, desc: bool,
+                        jobs: Sequence[Tuple[ScanSet, int]]) -> List[float]:
+        """Per-query upfront boundaries for a (table, column, direction)
+        group — one ``topk_init_batched`` launch.
+
+        Each job is ``(scan_set, effective_k)``; the boundary is the k-th
+        largest resident block-top-k value over the scan set's
+        fully-matching partitions (signed domain), or -inf when fewer
+        than k candidates exist.  Launch heaps are sized to the group's
+        k bucket; a prefix of a larger heap is the exact smaller-k
+        answer, so mixed-k groups share one launch.
+        """
+        # Jobs whose k is out of the useful range never consult the heap —
+        # exclude them up front so they neither widen the group's k bucket
+        # (merge cost grows with kb^2) nor force a launch alone.
+        live: List[Tuple[int, ScanSet, int]] = []
+        any_candidates = False
+        for i, (scan, k) in enumerate(jobs):
+            if scan.match is None or not (0 < int(k) <= TOPK_INIT_MAX_K):
+                continue
+            live.append((i, scan, int(k)))
+        out = [-np.inf] * len(jobs)
+        if not live:
+            return out
+        P = table.num_partitions
+        masks = np.zeros((len(live), P), dtype=np.float32)
+        for row, (_i, scan, _k) in enumerate(live):
+            full_ids = scan.part_ids[scan.match == FULL_MATCH]
+            masks[row, full_ids] = 1.0
+            any_candidates |= full_ids.size > 0
+        if not any_candidates:
+            return out                     # nothing to bound; skip the launch
+        kb = kops.k_bucket(max(k for _, _, k in live))
+        plane = self.cache.block_topk_plane(table, order_col, desc)
+        heap = kops.topk_init_batched_device(plane, masks, kb, self.mode)
+        self.counters.bump("topk", launches=1)
+        for row, (i, _scan, k) in enumerate(live):
+            out[i] = float(heap[row, k - 1])
+        return out
+
+    def topk_init(self, table, scan: ScanSet, order_col: str, desc: bool,
+                  k: int) -> float:
+        """One query's upfront boundary from the resident plane (signed)."""
+        if (scan.match is None or k <= 0 or k > TOPK_INIT_MAX_K
+                or not (scan.match == FULL_MATCH).any()):
+            return -np.inf
+        return self.topk_init_batch(table, order_col, desc, [(scan, k)])[0]
+
+    # -- workload driver ----------------------------------------------------
+
     def run_batch(self, queries: Sequence, pipeline=None) -> List:
-        """Full pruning pipelines over a workload, filter stage batched.
+        """Full pruning pipelines over a workload, every device-eligible
+        stage batched per table group.
 
         Returns one ``PruningReport`` per query, identical to running
-        ``pipeline.run(q)`` per query with ``filter_mode="device"``.
+        ``pipeline.run(q)`` per query in the same mode.  Each report
+        carries its own copy of THIS batch's counter delta (not the
+        service-lifetime totals) for per-stage attribution.
         """
         from ..core.flow import PruningPipeline
         if pipeline is None:
             pipeline = PruningPipeline(filter_mode="device", service=self)
-        # Only batch the filter stage when the pipeline itself declares the
+        # Only batch device stages when the pipeline itself declares the
         # device path — a host/adaptive pipeline keeps its own semantics.
-        if (pipeline.enable_filter and not pipeline.adaptive
-                and pipeline.filter_mode == "device"):
-            filter_sets = self.prune_batch(queries)
-        else:
-            filter_sets = [None] * len(queries)
-        return [pipeline.run(q, filter_sets=filter_sets[i])
-                for i, q in enumerate(queries)]
+        device = not pipeline.adaptive and pipeline.filter_mode == "device"
+        before = self.counters.snapshot()
+        states = [pipeline.make_state(q) for q in queries]
+        for tech in pipeline.techniques:
+            tech.run_batch(pipeline, states, service=self if device else None)
+        reports = [pipeline.finish(s) for s in states]
+        delta = ServiceCounters.delta(before, self.counters.snapshot())
+        for r in reports:
+            # each report owns its copy — mutating one never leaks
+            r.counters = {**delta,
+                          "technique": {k: dict(v)
+                                        for k, v in delta["technique"].items()}}
+        return reports
