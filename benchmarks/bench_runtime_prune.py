@@ -12,6 +12,12 @@ filter+join+topk workload through both regimes over a P x Q grid:
     device pipeline — filter ranges, join overlap, and top-k boundary
     init each batched per table group against resident planes.
 
+A dedicated Bloom cell (ISSUE 3) isolates the blocked-Bloom JOIN path:
+every build side exceeds the distinct limit, so regime A runs the
+per-query host matcher while regime B issues one batched
+``bloom_probe_batched`` enumeration per table group — the JSON reports
+the qps delta and the launch/fallback attribution.
+
 Run on the jnp ref backend (the container has no TPU); the overheads
 being amortized — per-query predicate evaluation over [P] stats, staging,
 Python dispatch — are real on every backend.  Emits machine-readable
@@ -102,6 +108,66 @@ def _time(fn, repeats: int) -> float:
     return float(np.median(times))
 
 
+BLOOM_NDV_LIMIT = 64   # push every join build over the distinct limit
+
+
+def make_bloom_queries(Q: int, events, users, rng):
+    """All-join workload whose build sides exceed BLOOM_NDV_LIMIT: every
+    summary is a blocked Bloom filter, isolating the Bloom matching path
+    (ISSUE 3 — previously a per-query host fallback, now one batched
+    enumeration launch per table group)."""
+    qs = []
+    for _ in range(Q):
+        frac = float(np.exp(rng.normal(np.log(0.004), 1.0)))
+        lo = TS_MAX * (1 - min(frac, 1.0))
+        pred = (E.col("ts") >= lo) & (E.col("ts") <= TS_MAX)
+        lo_a = int(rng.integers(20, 60))
+        upred = (E.col("age") >= lo_a) & (E.col("age") <= lo_a + 14)
+        qs.append(Query(
+            scans={"events": TableScanSpec(events, pred),
+                   "users": TableScanSpec(users, upred)},
+            join=JoinSpec("users", "events", "id", "user_id")))
+    return qs
+
+
+def run_bloom_cell(P: int, Q: int, rng, repeats: int) -> dict:
+    """Bloom-path qps: per-query host loop vs the batched engine."""
+    events, users = tables(P)
+    queries = make_bloom_queries(Q, events, users, rng)
+
+    host_pipe = PruningPipeline(join_ndv_limit=BLOOM_NDV_LIMIT)
+    sample = queries[:min(Q, LOOP_SAMPLE)]
+
+    def loop():
+        for q in sample:
+            host_pipe.run(q)
+
+    loop()
+    s_loop = _time(loop, repeats) / len(sample)
+
+    svc = PruningService(mode="ref")
+    pipe = PruningPipeline(filter_mode="device", service=svc,
+                           join_ndv_limit=BLOOM_NDV_LIMIT)
+
+    def batched():
+        svc.run_batch(queries, pipe)
+
+    counters = svc.run_batch(queries, pipe)[0].counters   # warm + snapshot
+    s_batched = _time(batched, repeats)
+    tech = counters["technique"]
+    return dict(
+        P=P, Q=Q,
+        us_per_query_loop=s_loop * 1e6,
+        us_total_batched=s_batched * 1e6,
+        qps_loop=1.0 / s_loop,
+        qps_batched=Q / s_batched,
+        qps_delta=Q / s_batched - 1.0 / s_loop,
+        speedup=(Q / s_batched) * s_loop,
+        bloom_launches=tech.get("join_bloom", {}).get("launches", 0),
+        bloom_fallbacks=tech.get("join_bloom", {}).get("fallbacks", 0),
+    )
+
+
 def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         json_path: str = "BENCH_runtime_prune.json"):
     rng = np.random.default_rng(0)
@@ -156,6 +222,18 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
                 f"qps_batched={qps_batched:.0f} qps_loop={qps_loop:.0f} "
                 f"x{cell['speedup']:.1f}",
             ))
+    # Bloom-path cell (ISSUE 3): the biggest grid P, all-Bloom joins —
+    # reports the qps delta now that the enumeration is one batched
+    # launch per table group instead of a per-query host fallback.
+    bloom_cell = run_bloom_cell(max(grid_p), max(min(grid_q), 32), rng,
+                                repeats=3 if max(grid_p) <= 10_000 else 1)
+    rows.append((
+        f"runtime_prune_bloom_P{bloom_cell['P']}_Q{bloom_cell['Q']}",
+        bloom_cell["us_total_batched"],
+        f"qps_batched={bloom_cell['qps_batched']:.0f} "
+        f"qps_loop={bloom_cell['qps_loop']:.0f} "
+        f"x{bloom_cell['speedup']:.1f}",
+    ))
     if csv:
         emit(rows)
     if json_path:
@@ -166,10 +244,17 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
             workload="mixed filter+join+topk",
             loop_sample=LOOP_SAMPLE,
             grid=cells,
+            bloom=bloom_cell,
             acceptance=dict(
                 target="qps_batched >= 5x qps_loop at Q=256, P=100k",
                 speedup=accept[0]["speedup"] if accept else None,
                 passed=bool(accept and accept[0]["speedup"] >= 5.0),
+                bloom_target=("batched Bloom path beats the per-query host "
+                              "loop with zero host fallbacks"),
+                bloom_qps_delta=bloom_cell["qps_delta"],
+                bloom_passed=bool(bloom_cell["qps_delta"] > 0
+                                  and bloom_cell["bloom_fallbacks"] == 0
+                                  and bloom_cell["bloom_launches"] >= 1),
             ),
         )
         with open(json_path, "w") as f:

@@ -220,6 +220,10 @@ class DeviceStatsCache:
 
       * **join-key planes** (``join_key_plane``): the key column's widened
         f32 [P] min/max rows, consumed by ``join_overlap_batched``;
+      * **enumeration planes** (``enum_plane``): the key column's
+        integer-snapped [P] int32 pmin/width rows (width 0 = never
+        enumerate), consumed by ``bloom_probe_batched`` for the Bloom
+        half of JOIN pruning;
       * **block-top-k planes** (``block_topk_plane``): [P, KPLANE] rows of
         the column's per-partition top-K *signed* values (sign = +1 DESC /
         -1 ASC, nulls excluded, f64 -> f32 rounded toward -inf so every
@@ -240,6 +244,8 @@ class DeviceStatsCache:
         self.misses = 0
         # (name, uid, col) -> (pmin [P], pmax [P]) widened f32 device rows
         self.key_planes: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+        # (name, uid, col) -> (pmin [P] i32, width [P] i32, wmax int)
+        self.enum_planes: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         # (name, uid, col, desc, k) -> [P, k] signed block-top-k device rows
         self.topk_planes: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
         self.max_planes = max_planes
@@ -311,6 +317,48 @@ class DeviceStatsCache:
         return self._plane_put(self.key_planes, key,
                                (jnp.asarray(pmin), jnp.asarray(pmax)))
 
+    def enum_plane(self, table, key_col: str) -> Tuple:
+        """The key column's resident enumeration rows:
+        (pmin, width, wmax, domain_ok).
+
+        pmin/width are [P] int32 device rows feeding the Bloom probe
+        kernel's narrow-range enumeration: integer-snapped partition
+        minima (``ceil(col_min)``) and candidate counts
+        (``floor(col_max) - ceil(col_min) + 1``, compared in float64
+        before any integer cast so extreme ranges can't overflow).
+        width 0 marks partitions that must never be enumerated — empty
+        interval, non-finite bounds, or outside int32 (the kernel hashes
+        int32 candidates) — and means *keep*: skipping enumeration can
+        only miss prunable partitions, never prune joinable ones.  wmax
+        (host int) is the plane's max width, used to bucket the kernel's
+        enumeration lane dim without a device round-trip.  domain_ok
+        (host bool) records whether every non-empty partition's bounds
+        sit inside int32 — the device-vs-host parity gate
+        (``PruningService.join_device_eligible``), computed once here so
+        eligibility never rescans [P] stats per query.
+
+        Same (table identity, column) keying and column-granular
+        ``notify_update`` invalidation as ``join_key_plane``.
+        """
+        key = (table.name, table.stats.uid, key_col)
+        e = self._plane_get(self.enum_planes, key)
+        if e is not None:
+            return e
+        lo = np.ceil(np.asarray(table.stats.col_min(key_col), np.float64))
+        hi = np.floor(np.asarray(table.stats.col_max(key_col), np.float64))
+        with np.errstate(invalid="ignore", over="ignore"):
+            wf = hi - lo + 1.0
+            in32 = (lo >= -2.0 ** 31) & (hi < 2.0 ** 31)
+            live = np.isfinite(lo) & np.isfinite(hi) & (lo <= hi)
+            ok = live & in32 & (wf > 0) & (wf < 2.0 ** 31)
+        domain_ok = not bool(np.any(live & ~in32))
+        pmin = np.where(ok, lo, 0.0).astype(np.int32)
+        width = np.where(ok, wf, 0.0).astype(np.int32)
+        wmax = int(width.max()) if width.size else 0
+        return self._plane_put(self.enum_planes, key,
+                               (jnp.asarray(pmin), jnp.asarray(width), wmax,
+                                domain_ok))
+
     def block_topk_plane(self, table, order_col: str, desc: bool,
                          k_plane: int = KPLANE) -> jnp.ndarray:
         """The column's resident [P, k_plane] signed block-top-k rows.
@@ -342,12 +390,13 @@ class DeviceStatsCache:
 
         ``column=None`` drops everything (insert/delete semantics); a
         column drops the [C, P] planes (they carry every column's stats)
-        plus only that column's join-key / block-top-k planes.
+        plus only that column's join-key / enumeration / block-top-k
+        planes.
         """
         stale = [k for k in self.entries if k[0] == table_name]
         for k in stale:
             del self.entries[k]
-        for store in (self.key_planes, self.topk_planes):
+        for store in (self.key_planes, self.enum_planes, self.topk_planes):
             stale = [k for k in store
                      if k[0] == table_name
                      and (column is None or k[2] == column)]
@@ -367,7 +416,8 @@ class DeviceStatsCache:
     def on_update(self, table_name: str, column: str) -> None:
         # Updates are column-scoped: the [C, P] stat planes must re-stage
         # (they include the updated column), while the other columns'
-        # join-key / block-top-k planes remain valid and stay resident.
+        # join-key / enumeration / block-top-k planes remain valid and
+        # stay resident.
         self.invalidate(table_name, column=column)
 
     @property
@@ -380,5 +430,7 @@ class DeviceStatsCache:
         total = sum(e.nbytes for e in self.entries.values())
         total += sum(int(a.nbytes) + int(b.nbytes)
                      for a, b in self.key_planes.values())
+        total += sum(int(a.nbytes) + int(b.nbytes)
+                     for a, b, _w in self.enum_planes.values())
         total += sum(int(r.nbytes) for r in self.topk_planes.values())
         return total

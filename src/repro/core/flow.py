@@ -276,11 +276,13 @@ class LimitTechnique(Technique):
 
 class JoinTechnique(Technique):
     """Sec. 6 JOIN pruning.  The build side is summarized on the host
-    (runtime values); in device mode the distinct-key overlap against the
-    probe partitions runs on the resident join-key plane via the batched
-    ``join_overlap_batched`` kernel — one launch per (table, key column)
-    group in ``run_batch``.  Bloom summaries and non-castable keys fall
-    back to the host matcher (counted, never wrong)."""
+    (runtime values); in device mode the probe-side matching runs on the
+    resident planes — the distinct-key overlap via ``join_overlap_batched``
+    over the join-key plane, the Bloom narrow-range enumeration via
+    ``bloom_probe_batched`` over the enumeration plane — one launch per
+    (table, key column, summary kind) group in ``run_batch``.
+    Non-castable distinct keys and non-integer Bloom key domains fall
+    back to the host matcher (counted per technique, never wrong)."""
 
     name = "join"
 
@@ -305,15 +307,17 @@ class JoinTechnique(Technique):
 
     def _apply(self, pipe, state, summary: BuildSummary,
                hit: Optional[np.ndarray]) -> None:
-        """Overlap + prune the probe scan; ``hit`` is the device overlap
-        result [P] for the distinct path (None -> host searchsorted)."""
+        """Overlap + prune the probe scan; ``hit`` is the device result
+        [P] — distinct-key overlap or Bloom enumeration, per the summary
+        kind (None -> host matcher)."""
         q = state.query
         scan = state.scan_sets[q.join.probe]
-        distinct_hit = None if hit is None else \
-            np.asarray(hit)[scan.part_ids] > 0
+        over = None if hit is None else np.asarray(hit)[scan.part_ids] > 0
         res = prune_probe(
             scan, q.scans[q.join.probe].table.stats,
-            q.join.probe_key, summary, distinct_hit=distinct_hit,
+            q.join.probe_key, summary,
+            distinct_hit=over if summary.distinct is not None else None,
+            bloom_hit=over if summary.bloom is not None else None,
         )
         state.scan_sets[q.join.probe] = res.scan
         state.per_scan[q.join.probe]["join"] = TechniqueReport(
@@ -347,8 +351,11 @@ class JoinTechnique(Technique):
     def run_batch(self, pipe, states, service=None):
         if service is None:
             return super().run_batch(pipe, states, service)
-        # (table id, probe key) -> (table, key_col, [(state, summary)])
+        # (table id, probe key) -> (table, key_col, [(state, summary)]),
+        # one group dict per summary kind: distinct overlaps and Bloom
+        # enumerations are different kernels, each one launch per group.
         groups: Dict[Tuple, Tuple] = {}
+        bloom_groups: Dict[Tuple, Tuple] = {}
         host_jobs = []
         for st in states:
             summary = self._summarize(pipe, st)
@@ -356,10 +363,12 @@ class JoinTechnique(Technique):
                 continue
             q = st.query
             table = q.scans[q.join.probe].table
-            if not service.join_device_eligible(summary):
+            if not service.join_device_eligible(summary, table,
+                                                q.join.probe_key):
                 host_jobs.append((st, summary))
                 continue
-            groups.setdefault(
+            g = groups if summary.distinct is not None else bloom_groups
+            g.setdefault(
                 (id(table), q.join.probe_key),
                 (table, q.join.probe_key, []))[2].append((st, summary))
         for table, key_col, members in groups.values():
@@ -369,9 +378,18 @@ class JoinTechnique(Technique):
                           for st, _ in members])
             for (st, summary), hit in zip(members, hits):
                 self._apply(pipe, st, summary, hit)
+        for table, key_col, members in bloom_groups.values():
+            hits = service.bloom_hit_batch(
+                table, key_col, [s for _, s in members],
+                part_ids=[st.scan_sets[st.query.join.probe].part_ids
+                          for st, _ in members])
+            for (st, summary), hit in zip(members, hits):
+                self._apply(pipe, st, summary, hit)
         for st, summary in host_jobs:
             if not summary.empty:
-                service.counters.bump(self.name, fallbacks=1)
+                service.counters.bump(
+                    "join_bloom" if summary.bloom is not None else self.name,
+                    fallbacks=1)
             self._apply(pipe, st, summary, None)
 
 

@@ -13,8 +13,14 @@ Summary structure ("balance between accuracy and storage cost"):
   * otherwise a *blocked Bloom filter* (512-bit blocks = 16 x int32 words,
     4 probe bits), which additionally prunes narrow-range partitions by
     enumerating their possible integer/dictionary-code values against the
-    filter.  Blocked layout + 32-bit mixing is the TPU adaptation: probes
-    are branch-free int32 lane ops (kernels/bloom_probe.py).
+    filter.  Enumeration is only sound on integer-domain columns (int /
+    dictionary codes): fractional keys are invisible to the integer
+    enumeration, so float key columns skip it (skip = keep, never prune).
+    Blocked layout + 32-bit mixing is the TPU adaptation: probes are
+    branch-free int32 lane ops — ``kernels/bloom_probe.py`` runs the same
+    enumeration batched (Q filters x P partitions) against the resident
+    enumeration plane, and ``prune_probe`` accepts its result via
+    ``bloom_hit`` exactly like ``distinct_hit``.
 
 The technique is probabilistic in the paper's sense: it may *miss* a
 prunable partition (Bloom false positives) but never prunes a partition
@@ -32,6 +38,7 @@ from .metadata import NO_MATCH, PartitionStats, ScanSet
 
 BLOCK_WORDS = 16          # 16 x 32-bit words = 512-bit blocks
 K_PROBES = 4
+DEFAULT_ENUM_LIMIT = 1024  # max values enumerated per narrow partition
 
 
 def _mix32(x: np.ndarray) -> np.ndarray:
@@ -123,7 +130,11 @@ def summarize_build(
     if null_mask is not None:
         keys = keys[~null_mask]
     if keys.size == 0:
-        return BuildSummary(np.inf, -np.inf, 0, np.zeros(0), None, 16)
+        # The empty distinct set keeps the key column's dtype: callers
+        # (device eligibility, np.isin masks) see the real key domain, not
+        # an accidental float64.
+        return BuildSummary(np.inf, -np.inf, 0,
+                            np.zeros(0, dtype=keys.dtype), None, 16)
     uniq = np.unique(keys)
     if uniq.size <= ndv_limit:
         return BuildSummary(
@@ -153,16 +164,20 @@ def prune_probe(
     stats: PartitionStats,
     key_col: str,
     summary: BuildSummary,
-    enum_limit: int = 1024,
+    enum_limit: int = DEFAULT_ENUM_LIMIT,
     distinct_hit: Optional[np.ndarray] = None,
+    bloom_hit: Optional[np.ndarray] = None,
 ) -> JoinPruneResult:
     """Steps 3+4: overlap the summary with probe partitions' min/max.
 
     ``distinct_hit`` injects a precomputed distinct-key overlap result
     (bool per scan entry) in place of the host searchsorted — the device
     engine computes it with the batched ``join_overlap_batched`` kernel
-    over the resident join-key plane.  It must be a superset-safe overlap
-    (never False for a partition whose range contains a build key).
+    over the resident join-key plane.  ``bloom_hit`` is its Bloom-summary
+    analogue: the narrow-range enumeration result (bool per scan entry)
+    from ``bloom_probe_batched`` over the resident enumeration plane,
+    True for every non-enumerable partition.  Either injection must be
+    superset-safe (never False for a partition that may hold a build key).
     """
     before = len(scan)
     pmin = stats.col_min(key_col)[scan.part_ids]
@@ -190,16 +205,31 @@ def prune_probe(
         n_distinct = int((keep & ~hit).sum())
         keep &= hit
     elif summary.bloom is not None:
-        width = (pmax - pmin + 1).astype(np.int64)
-        narrow = keep & (width > 0) & (width <= enum_limit)
-        idx = np.where(narrow)[0]
-        if idx.size:
-            cand = pmin[idx, None] + np.arange(enum_limit)[None, :]
-            valid = np.arange(enum_limit)[None, :] < width[idx, None]
-            hits = summary.bloom.contains(cand.reshape(-1)).reshape(cand.shape)
-            any_hit = (hits & valid).any(axis=1)
-            n_bloom = int((~any_hit).sum())
-            keep[idx[~any_hit]] = False
+        if bloom_hit is not None:
+            hit = np.asarray(bloom_hit, dtype=bool)
+            n_bloom = int((keep & ~hit).sum())
+            keep &= hit
+        elif stats.column(key_col).kind != "float":
+            # Integer/dictionary domains only: fractional build keys are
+            # invisible to the integer enumeration, so float columns skip
+            # it entirely (skip = keep — the technique may only miss
+            # prunable partitions, never prune joinable ones).  Width is
+            # compared in float64 before any integer cast: int64-extreme
+            # or huge-float ranges would overflow the cast (and can raise)
+            # but simply aren't narrow.
+            widthf = pmax - pmin + 1.0
+            narrow = keep & (widthf > 0) & (widthf <= enum_limit)
+            idx = np.where(narrow)[0]
+            if idx.size:
+                width = widthf[idx].astype(np.int64)
+                cand = (pmin[idx, None].astype(np.int64)
+                        + np.arange(enum_limit)[None, :])
+                valid = np.arange(enum_limit)[None, :] < width[:, None]
+                hits = summary.bloom.contains(
+                    cand.reshape(-1)).reshape(cand.shape)
+                any_hit = (hits & valid).any(axis=1)
+                n_bloom = int((~any_hit).sum())
+                keep[idx[~any_hit]] = False
 
     pruned = scan.keep(keep)
     return JoinPruneResult(pruned, n_range, n_distinct, n_bloom, before, len(pruned))

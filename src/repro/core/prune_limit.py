@@ -24,6 +24,7 @@ from .metadata import FULL_MATCH, PartitionStats, ScanSet
 ALREADY_MINIMAL = "already_minimal"
 UNSUPPORTED_SHAPE = "unsupported_shape"
 NO_FULLY_MATCHING = "no_fully_matching"   # prerequisites unmet -> reorder only
+PRUNED_TO_0 = "pruned_to_=0"              # LIMIT 0: scan wiped entirely
 PRUNED_TO_1 = "pruned_to_=1"
 PRUNED_TO_N = "pruned_to_>1"
 
@@ -51,6 +52,13 @@ def limit_prune(
     before = len(scan)
     if not supported_shape:
         return LimitPruneResult(scan, False, UNSUPPORTED_SHAPE, before, before)
+    if k == 0:
+        # LIMIT 0 (BI tools fetching schemas): the scan is wiped — checked
+        # BEFORE the already-minimal early return (a single-partition scan
+        # must be emptied too) and reported under its own category, so the
+        # Table 2 accounting never claims "pruned to 1" for 0 partitions.
+        empty = ScanSet(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int8))
+        return LimitPruneResult(empty, True, PRUNED_TO_0, before, 0)
     if before <= 1:
         return LimitPruneResult(scan, False, ALREADY_MINIMAL, before, before)
     assert scan.match is not None, "run filter pruning first"
@@ -58,11 +66,6 @@ def limit_prune(
     rows = stats.row_counts[scan.part_ids]
     full = scan.match == FULL_MATCH
     total_full_rows = int(rows[full].sum())
-
-    if k == 0:
-        # LIMIT 0 (BI tools fetching schemas): empty scan set.
-        empty = ScanSet(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int8))
-        return LimitPruneResult(empty, True, PRUNED_TO_1, before, 0)
 
     if total_full_rows < k or not full.any():
         # Cannot prune; reorder fully-matching partitions to the front.

@@ -10,6 +10,9 @@ Pruning hot spots (the paper's engine):
   join_overlap         — distinct-keys vs partition-range overlap (Sec. 6)
   join_overlap_batched — Q build summaries x P probe partitions against the
                          resident join-key plane in one launch
+  bloom_probe_batched  — Q blocked-Bloom filters x P probe partitions in one
+                         launch: narrow-range enumeration against the
+                         resident enumeration plane (Sec. 6, large-NDV path)
 LM hot spot:
   flash_attention      — causal online-softmax attention (prefill compute)
 
@@ -19,6 +22,7 @@ ref.py.
 """
 
 from . import ops, ref
+from .bloom_probe import bloom_probe_batched
 from .flash_attention import flash_attention
 from .join_overlap import join_overlap, join_overlap_batched
 from .minmax_prune import minmax_prune
@@ -27,4 +31,4 @@ from .topk_boundary import topk_boundary, topk_init_batched
 
 __all__ = ["ops", "ref", "minmax_prune", "minmax_prune_batched",
            "topk_boundary", "topk_init_batched", "join_overlap",
-           "join_overlap_batched", "flash_attention"]
+           "join_overlap_batched", "bloom_probe_batched", "flash_attention"]

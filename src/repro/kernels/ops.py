@@ -39,7 +39,9 @@ import numpy as np
 from ..core.device_stats import (DeviceStats, cast_bounds_f32, cast_stats_f32,
                                  snap_bounds_integral)
 from ..core.metadata import PartitionStats
+from ..core.prune_join import BLOCK_WORDS
 from . import ref
+from .bloom_probe import bloom_probe_batched
 from .join_overlap import join_overlap, join_overlap_batched
 from .minmax_prune import minmax_prune
 from .minmax_prune_batched import BLOCK_Q, minmax_prune_batched
@@ -84,6 +86,35 @@ def d_bucket(d: int) -> int:
     as ``k_bucket`` for constraint counts.
     """
     return _pow2_at_least(max(d, 1), floor=8)
+
+
+def bloom_bucket(n_blocks: int) -> int:
+    """Bloom block-count bucket: next power of two >= max(n_blocks, 8).
+
+    Filters are *tiled* (not zero-padded) up to the bucket — block
+    selection is ``h & (blocks - 1)``, so a periodically repeated filter
+    probes identical words under the larger mask (see pack_blooms) —
+    and the floor keeps the packed [16, Bb] word planes at full sublane
+    height.
+    """
+    return _pow2_at_least(max(n_blocks, 1), floor=8)
+
+
+def enum_bucket(w: int) -> int:
+    """Enumeration-lane bucket: next power of two >= max(w, 128).
+
+    The Bloom kernel enumerates a partition's candidate values on the
+    lane dim; the bucket keeps lanes full (128) and recompiles bounded.
+    """
+    return _pow2_at_least(max(w, 1), floor=128)
+
+
+# Kernel-path cap on blocks per Bloom filter: the in-kernel one-hot gather
+# materializes a [Bb, E] f32 tile per probe step (4MB at 1024 x 1024 —
+# comfortably inside VMEM next to the [16, Bb] word planes).  Bigger
+# filters (build NDV > ~32k at 16 bits/key) fall back to the host
+# matcher, counted per technique.
+BLOOM_MAX_BLOCKS = 1024
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +413,84 @@ def join_overlap_batched_device(
     dist_d = jnp.asarray(pack_distinct(distinct_lists))
     hit = np.asarray(join_overlap_batched(
         dist_d, pmin, pmax,
+        interpret=(mode == "interpret") or not _on_tpu()))
+    return hit[:Q]
+
+
+def pack_blooms(blooms: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack Q blocked-Bloom filters into the kernel's [Qb, 16, Bb] layout.
+
+    Returns (lo, hi): exact f32 16-bit halves of the filter words, word
+    index on the sublane dim (pre-transposed for the kernel's one-hot
+    matmul gather).  Each filter is tiled periodically up to the common
+    power-of-two Bb bucket: blocked-Bloom block selection is
+    ``h & (n_blocks - 1)``, and ``tiled[h & (Bb - 1)] == words[h & (nb - 1)]``
+    for any pow-2 multiple Bb, so every query in a launch shares one
+    block mask and recompiles stay bounded by |buckets|.  Query rows
+    beyond Q are all-zero filters (never a hit; sliced off).
+    """
+    Q = len(blooms)
+    Bb = bloom_bucket(max(b.n_blocks for b in blooms))
+    Qb = q_bucket(Q)
+    lo = np.zeros((Qb, BLOCK_WORDS, Bb), dtype=np.float32)
+    hi = np.zeros((Qb, BLOCK_WORDS, Bb), dtype=np.float32)
+    for qi, b in enumerate(blooms):
+        w = b.words.reshape(b.n_blocks, BLOCK_WORDS).T        # [16, nb]
+        w = np.tile(w, (1, Bb // b.n_blocks))                 # [16, Bb]
+        lo[qi] = (w & np.uint32(0xFFFF)).astype(np.float32)
+        hi[qi] = (w >> np.uint32(16)).astype(np.float32)
+    return lo, hi
+
+
+def bloom_probe_batched_device(
+    blooms: Sequence,        # Q core.prune_join.BlockedBloom filters
+    pmin: jnp.ndarray,       # [P] int32 resident enumeration minima
+    width: jnp.ndarray,      # [P] int32 resident candidate counts (0=keep)
+    wmax: int,               # host-side max raw width (plane metadata)
+    enum_limit: int,
+    mode: str = "auto",
+    part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+) -> np.ndarray:
+    """hit [Q, P] int32 — Q Bloom summaries vs the resident enumeration
+    plane; row q equals the (fixed) host matcher's narrow-range
+    enumeration for query q's filter, false-positive-only by construction
+    (hit is 0 only where 0 < width <= enum_limit and no candidate value
+    is in the filter).
+
+    The no-Pallas fallback exploits narrowness *sparsity*: only
+    enumerable partitions — restricted to each query's scan set when
+    ``part_ids_lists`` names it (other entries are 1 and must not be
+    read) — go through the host BlockedBloom probe at C speed.  The
+    kernel path evaluates the resident plane dense (the batched design)
+    with a per-partition dynamic trip count.
+    """
+    Q = len(blooms)
+    P = int(pmin.shape[0])
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        # np.asarray of a CPU-backed jax array is a view — no copy.
+        pmin_h = np.asarray(pmin)
+        width_h = np.asarray(width)
+        hit = np.ones((Q, P), dtype=np.int32)
+        for qi, bloom in enumerate(blooms):
+            ids = (np.arange(P) if part_ids_lists is None
+                   else np.asarray(part_ids_lists[qi]))
+            w = width_h[ids]
+            nids = ids[(w > 0) & (w <= enum_limit)]
+            if not nids.size:
+                continue
+            wq = width_h[nids]
+            span = int(wq.max())
+            cand = (pmin_h[nids][:, None].astype(np.int64)
+                    + np.arange(span)[None, :])
+            valid = np.arange(span)[None, :] < wq[:, None]
+            hits = bloom.contains(cand.reshape(-1)).reshape(cand.shape)
+            hit[qi, nids[~(hits & valid).any(axis=1)]] = 0
+        return hit
+    lo, hi = pack_blooms(blooms)
+    width_eff = jnp.where(width <= enum_limit, width, 0).astype(jnp.int32)
+    eb = enum_bucket(max(1, min(int(wmax), int(enum_limit))))
+    hit = np.asarray(bloom_probe_batched(
+        jnp.asarray(lo), jnp.asarray(hi), pmin, width_eff, enum_pad=eb,
         interpret=(mode == "interpret") or not _on_tpu()))
     return hit[:Q]
 

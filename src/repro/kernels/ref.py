@@ -100,6 +100,72 @@ def topk_boundary_prefix_ref(rows: jax.Array, b_init) -> tuple:
     return skip.astype(jnp.int32), inclusive[-1]
 
 
+# ---------------------------------------------------------------------------
+# Blocked-Bloom probe primitives (shared by the oracle and the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+# Murmur3 finalizer constants as int32 bit patterns (the host mixer in
+# core.prune_join works in uint32; two's-complement wraparound is the same
+# mod-2^32 arithmetic, so int32 lanes produce identical bits).
+MURMUR_C1 = 0x85EBCA6B - (1 << 32)
+MURMUR_C2 = 0xC2B2AE35 - (1 << 32)
+H1_SALT = 0x9E3779B9 - (1 << 32)
+H2_SALT = 0x7F4A7C15
+
+
+def lsr32(x: jax.Array, s: int) -> jax.Array:
+    """Logical right shift of int32 lanes by a constant: the arithmetic
+    shift's sign fill is masked off (TPU has no unsigned shift)."""
+    if s == 0:
+        return x
+    return (x >> s) & jnp.int32((1 << (32 - s)) - 1)
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """Murmur3 finalizer on int32 lanes — bit-identical to the uint32
+    host mixer ``core.prune_join._mix32``."""
+    x = x ^ lsr32(x, 16)
+    x = x * jnp.int32(MURMUR_C1)
+    x = x ^ lsr32(x, 13)
+    x = x * jnp.int32(MURMUR_C2)
+    x = x ^ lsr32(x, 16)
+    return x
+
+
+def bloom_probe_batched_ref(lo_t, hi_t, pmin, width, enum_pad: int) -> jax.Array:
+    """hit [Q, P] int32 — jnp oracle for kernels/bloom_probe.py.
+
+    ``lo_t``/``hi_t`` are the packed filters (ops.pack_blooms): [Q, 16, Bb]
+    f32 halves of each query's filter words, tiled to the common Bb block
+    bucket.  ``pmin``/``width`` are the int32 enumeration rows (width 0 =
+    not enumerable = keep).  Dense gather formulation — peak memory is
+    O(Q*P*E), so this is the small-shape test oracle; the production
+    no-Pallas fallback (ops.bloom_probe_batched_device) instead exploits
+    narrowness sparsity with the host BlockedBloom probe.
+    """
+    Q, _w16, Bb = lo_t.shape
+    words = (hi_t.astype(jnp.int32) << 16) | lo_t.astype(jnp.int32)
+    flat = words.reshape(Q, -1)                        # [Q, 16 * Bb]
+    pmin = pmin.astype(jnp.int32)
+    width = width.astype(jnp.int32)
+    j = jnp.arange(enum_pad, dtype=jnp.int32)
+    cand = pmin[:, None] + j[None, :]                  # [P, E]
+    h0 = mix32(cand ^ mix32(cand >> 31))               # >> 31: int64 hi word
+    h1 = mix32(h0 ^ jnp.int32(H1_SALT))
+    h2 = mix32(h1 ^ jnp.int32(H2_SALT))
+    block = h0 & jnp.int32(Bb - 1)
+    ok = jnp.ones((Q,) + cand.shape, dtype=bool)
+    for i in range(4):
+        wi = lsr32(h1, 8 * i) & 15
+        bi = lsr32(h2, 8 * i) & 31
+        idx = wi * Bb + block                          # [P, E] word index
+        w = jnp.take(flat, idx.reshape(-1), axis=1).reshape(ok.shape)
+        ok &= ((w >> bi[None]) & 1) == 1
+    valid = j[None, :] < width[:, None]                # [P, E]
+    hit = jnp.any(ok & valid[None], axis=2) | (width == 0)[None, :]
+    return hit.astype(jnp.int32)
+
+
 def join_overlap_ref(pmin, pmax, distinct) -> jax.Array:
     """hit [P] int32 via searchsorted (the CPU engine's formulation)."""
     lo = jnp.searchsorted(distinct, pmin, side="left")

@@ -71,7 +71,18 @@ class ContinuousBatcher:
     # -- API ----------------------------------------------------------------
 
     def submit(self, tokens: np.ndarray, max_new: int = 16) -> int:
-        req = Request(self._rid, np.asarray(tokens, np.int32), max_new)
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) >= self.max_seq:
+            # A slot's KV region holds max_seq positions and decode
+            # scatters at positions[slot] onward: admitting a longer
+            # prompt would write past the slot's region (and start
+            # positions[slot] beyond max_seq).  Rejecting at submit keeps
+            # _admit unconditional and the failure visible to the caller.
+            raise ValueError(
+                f"prompt of {len(tokens)} tokens exceeds slot capacity "
+                f"{self.max_seq - 1} (max_seq={self.max_seq}, and decoding "
+                f"needs at least one free position)")
+        req = Request(self._rid, tokens, max_new)
         self._rid += 1
         self.queue.append(req)
         return req.rid

@@ -11,10 +11,14 @@ batching every device-eligible stage per table group:
     by one ``minmax_prune_batched`` launch per group against the resident
     [C, P] planes (non-lowerable predicates fall back to the host
     evaluator, counted, never wrong);
-  * **join** (``join_hit_batch``): build-side summaries stay host-side
-    (they are runtime values), but the distinct-key overlap against the
-    probe partitions runs as one ``join_overlap_batched`` launch per
-    (table, key column) group against the resident join-key plane;
+  * **join** (``join_hit_batch`` / ``bloom_hit_batch``): build-side
+    summaries stay host-side (they are runtime values), but the probe-side
+    matching runs on the resident planes — the distinct-key overlap as one
+    ``join_overlap_batched`` launch per (table, key column) group against
+    the join-key plane, and the Bloom narrow-range enumeration as one
+    ``bloom_probe_batched`` launch per group against the enumeration
+    plane (non-integer key domains keep the host matcher, counted per
+    technique under ``join_bloom``);
   * **top-k** (``topk_init_batch``): the Sec. 5.4 upfront boundary is
     initialized as the k-th largest value over each query's
     fully-matching partitions' resident block-top-k rows — one
@@ -54,7 +58,7 @@ from ..core.device_stats import DeviceStatsCache
 from ..core.metadata import FULL_MATCH, NO_MATCH, ScanSet
 from ..core.predicate_cache import TableVersion
 from ..core.prune_filter import eval_tv, extract_ranges
-from ..core.prune_join import BuildSummary
+from ..core.prune_join import DEFAULT_ENUM_LIMIT, BuildSummary
 from ..kernels import ops as kops
 
 # Boundary-init k cap: the kernel's rank-selection merge is quadratic in
@@ -201,18 +205,35 @@ class PruningService:
 
     # -- join stage ---------------------------------------------------------
 
-    @staticmethod
-    def join_device_eligible(summary: BuildSummary) -> bool:
-        """Can the distinct-key overlap run on the device plane?
+    def join_device_eligible(self, summary: BuildSummary, table=None,
+                             key_col: Optional[str] = None) -> bool:
+        """Can this summary's probe-side matching run on the device plane?
 
-        Requires an exact distinct summary (Bloom summaries keep the host
-        matcher's narrow-range enumeration) whose keys stay finite in
-        f32; empty summaries are host short-circuits, not kernel work.
+        Distinct summaries need their keys finite in f32 (join-key plane
+        overlap).  Bloom summaries need the probe table/key column: the
+        kernel's narrow-range enumeration hashes *int32* candidates with
+        the shared murmur mixer, so the key column must be an
+        integer/dictionary domain wholly inside int32 — fractional or
+        out-of-range keys keep the host matcher so batched output stays
+        bit-identical to it — and the filter must fit the kernel's block
+        cap (``kops.BLOOM_MAX_BLOCKS``).  The int32-domain check is the
+        cached ``domain_ok`` of the enumeration plane — table-version
+        invariant, so eligibility never rescans [P] stats per query.
+        Empty summaries are host short-circuits, not kernel work.
         """
-        if summary.empty or summary.distinct is None:
+        if summary.empty:
             return False
-        d32 = np.asarray(summary.distinct, dtype=np.float64).astype(np.float32)
-        return bool(np.isfinite(d32).all())
+        if summary.distinct is not None:
+            d32 = np.asarray(summary.distinct,
+                             dtype=np.float64).astype(np.float32)
+            return bool(np.isfinite(d32).all())
+        if summary.bloom is None or table is None or key_col is None:
+            return False
+        if summary.bloom.n_blocks > kops.BLOOM_MAX_BLOCKS:
+            return False
+        if table.stats.column(key_col).kind == "float":
+            return False
+        return self.cache.enum_plane(table, key_col)[3]
 
     def join_hit_batch(self, table, key_col: str,
                        summaries: Sequence[BuildSummary],
@@ -231,18 +252,40 @@ class PruningService:
         self.counters.bump("join", launches=1)
         return hit
 
+    def bloom_hit_batch(self, table, key_col: str,
+                        summaries: Sequence[BuildSummary],
+                        part_ids: Optional[Sequence[np.ndarray]] = None,
+                        enum_limit: int = DEFAULT_ENUM_LIMIT) -> np.ndarray:
+        """hit [G, P] for a (table, key column) group of Bloom summaries —
+        one batched narrow-range enumeration launch over the resident
+        enumeration plane (``part_ids`` restricts the no-Pallas fallback
+        to each query's scan set, like ``join_hit_batch``)."""
+        pmin, width, wmax, _domain_ok = self.cache.enum_plane(table, key_col)
+        hit = kops.bloom_probe_batched_device(
+            [s.bloom for s in summaries], pmin, width, wmax, enum_limit,
+            self.mode, part_ids_lists=part_ids)
+        self.counters.bump("join_bloom", launches=1)
+        return hit
+
     def join_hit(self, table, key_col: str, summary: BuildSummary,
                  part_ids: Optional[np.ndarray] = None
                  ) -> Optional[np.ndarray]:
-        """hit [P] for one query, or None -> host path (counted unless the
-        summary is empty, which the host handles as a trivial wipe)."""
-        if not self.join_device_eligible(summary):
+        """hit [P] for one query, or None -> host path (counted per
+        technique — ``join`` for distinct, ``join_bloom`` for Bloom —
+        unless the summary is empty, which the host handles as a trivial
+        wipe)."""
+        if not self.join_device_eligible(summary, table, key_col):
             if not summary.empty:
-                self.counters.bump("join", fallbacks=1)
+                self.counters.bump(
+                    "join_bloom" if summary.bloom is not None else "join",
+                    fallbacks=1)
             return None
-        return self.join_hit_batch(
-            table, key_col, [summary],
-            part_ids=None if part_ids is None else [part_ids])[0]
+        pid = None if part_ids is None else [part_ids]
+        if summary.distinct is not None:
+            return self.join_hit_batch(table, key_col, [summary],
+                                       part_ids=pid)[0]
+        return self.bloom_hit_batch(table, key_col, [summary],
+                                    part_ids=pid)[0]
 
     # -- top-k stage --------------------------------------------------------
 

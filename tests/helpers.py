@@ -25,8 +25,8 @@ def _build_hypothesis_shim() -> types.ModuleType:
 
     Supports exactly what this suite uses: ``given`` (keyword strategies,
     ``...`` meaning infer-from-annotation), ``settings(max_examples,
-    deadline)``, and ``strategies.{integers, booleans, sampled_from,
-    lists, composite}``.
+    deadline)``, and ``strategies.{integers, floats, booleans,
+    sampled_from, lists, one_of, composite}`` plus ``Strategy.map``.
     """
 
     class Strategy:
@@ -36,11 +36,23 @@ def _build_hypothesis_shim() -> types.ModuleType:
         def example(self, rnd: random.Random):
             return self._draw_fn(rnd)
 
+        def map(self, fn):
+            return Strategy(lambda rnd: fn(self._draw_fn(rnd)))
+
     def integers(min_value, max_value):
         return Strategy(lambda rnd: rnd.randint(min_value, max_value))
 
+    def floats(min_value=None, max_value=None, **_ignored):
+        lo = -1e6 if min_value is None else float(min_value)
+        hi = 1e6 if max_value is None else float(max_value)
+        return Strategy(lambda rnd: rnd.uniform(lo, hi))
+
     def booleans():
         return Strategy(lambda rnd: rnd.random() < 0.5)
+
+    def one_of(*strats):
+        return Strategy(
+            lambda rnd: strats[rnd.randrange(len(strats))].example(rnd))
 
     def sampled_from(seq):
         seq = list(seq)
@@ -112,9 +124,11 @@ def _build_hypothesis_shim() -> types.ModuleType:
     mod.is_shim = True
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
+    st_mod.floats = floats
     st_mod.booleans = booleans
     st_mod.sampled_from = sampled_from
     st_mod.lists = lists
+    st_mod.one_of = one_of
     st_mod.composite = composite
     mod.strategies = st_mod
     return mod

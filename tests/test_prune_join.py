@@ -1,5 +1,7 @@
 """JOIN pruning (paper Sec. 6): probabilistic but never incorrect."""
 
+import warnings
+
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -49,6 +51,14 @@ class TestBuildSummary:
         s = summarize_build(np.array([1, 2, 3]), null_mask=np.array([False, True, False]))
         assert s.count == 2 and s.max == 3
 
+    def test_empty_build_distinct_keeps_key_dtype(self):
+        """Regression: the empty distinct set used to be a float64
+        np.zeros(0) regardless of the key domain."""
+        s = summarize_build(np.zeros(0, dtype=np.int64))
+        assert s.empty and s.distinct.dtype == np.int64
+        s = summarize_build(np.array([1, 2]), null_mask=np.array([True, True]))
+        assert s.empty and s.distinct.dtype == np.int64
+
 
 def _probe_table(vals, rows_per_partition=4):
     return Table.build("probe", {"k": np.asarray(vals, dtype=np.int64)},
@@ -92,6 +102,64 @@ class TestProbePruning:
         summary = summarize_build(np.zeros(0, dtype=np.int64))
         res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k", summary)
         assert len(res.scan) == 0  # the paper's 100%-pruned case
+
+    def test_fractional_probe_range_not_falsely_pruned(self):
+        """Regression (ISSUE 3): on a float key column the narrow-range
+        enumeration probed only integer offsets from pmin — for the range
+        [0.6, 1.4] it tested the single candidate trunc(0.6) = 0 and
+        falsely pruned the partition containing the joinable key 1.2.
+        Float columns must skip enumeration entirely (skip = keep)."""
+        tbl = Table.build("probe", {"k": np.array([0.6, 1.4])},
+                          rows_per_partition=2)
+        assert tbl.stats.column("k").kind == "float"
+        build = np.array([1.2])
+        summary = summarize_build(build, ndv_limit=0)       # force Bloom
+        assert summary.bloom is not None
+        # guard: the regression is only visible if 0 isn't a false positive
+        assert not summary.bloom.contains(np.array([0])).any()
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k",
+                          summary)
+        assert 0 in res.scan.part_ids.tolist()
+        assert res.pruned_by_bloom == 0
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        build=st.lists(st.floats(-50, 50).map(lambda x: round(x * 4) / 4),
+                       min_size=1, max_size=40),
+        probe=st.lists(st.floats(-50, 50).map(lambda x: round(x * 4) / 4),
+                       min_size=4, max_size=80),
+    )
+    def test_never_prunes_joinable_fractional_keys(self, build, probe):
+        """Hypothesis regression for the float-domain enumeration bug:
+        quarter-step keys (exact in binary, frequently joinable) through
+        a forced Bloom summary must never lose a joinable partition."""
+        build = np.asarray(build, dtype=np.float64)
+        tbl = Table.build("probe", {"k": np.asarray(probe, np.float64)},
+                          rows_per_partition=4)
+        summary = summarize_build(build, ndv_limit=0)       # force Bloom
+        res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats, "k",
+                          summary)
+        kept = set(res.scan.part_ids.tolist())
+        for p in range(tbl.num_partitions):
+            v, _ = tbl.partition_ctx(p).col("k")
+            if np.isin(v, build).any():
+                assert p in kept, f"pruned joinable partition {p}"
+
+    def test_extreme_int64_range_width_does_not_overflow(self):
+        """Regression (ISSUE 3): width = (pmax - pmin + 1).astype(int64)
+        overflowed for int64-extreme ranges (numpy warns/raises on the
+        invalid cast).  Width is now compared in float64 first — such
+        partitions simply aren't narrow and must be kept."""
+        vals = np.array([-2**62, 2**62], dtype=np.int64)
+        tbl = Table.build("probe", {"k": vals}, rows_per_partition=2)
+        summary = summarize_build(np.arange(5000, dtype=np.int64),
+                                  ndv_limit=100)            # force Bloom
+        assert summary.bloom is not None
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            res = prune_probe(ScanSet.full(tbl.num_partitions), tbl.stats,
+                              "k", summary)
+        assert 0 in res.scan.part_ids.tolist()              # range overlaps
 
     @settings(max_examples=80, deadline=None)
     @given(

@@ -7,7 +7,7 @@ from repro.core import expr as E
 from repro.core.metadata import NO_MATCH, ScanSet
 from repro.core.prune_filter import eval_tv
 from repro.core.prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING,
-                                    PRUNED_TO_1, PRUNED_TO_N,
+                                    PRUNED_TO_0, PRUNED_TO_1, PRUNED_TO_N,
                                     UNSUPPORTED_SHAPE, limit_prune)
 from repro.core.rowval import matches
 from repro.data.table import Table
@@ -56,6 +56,19 @@ class TestLimitPrune:
         tbl = self.make_sorted_table()
         res = limit_prune(scan_after_filter(tbl, E.true()), tbl.stats, k=0)
         assert res.applied and res.partitions_after == 0
+        # honest Table 2 accounting: 0 partitions is not "pruned to 1"
+        assert res.category == PRUNED_TO_0
+
+    def test_k0_single_partition_scan_also_emptied(self):
+        """Regression (ISSUE 3): LIMIT 0 was checked after the
+        already-minimal early return, so a single-partition scan kept its
+        partition instead of being wiped."""
+        tbl = Table.build("t", {"x": np.arange(5, dtype=np.int64)},
+                          rows_per_partition=5)            # one partition
+        res = limit_prune(scan_after_filter(tbl, E.true()), tbl.stats, k=0)
+        assert res.applied and res.partitions_after == 0
+        assert len(res.scan) == 0
+        assert res.category == PRUNED_TO_0
 
     def test_no_fully_matching_reorders_only(self):
         # random layout: no fully-matching partitions for a tight predicate

@@ -1,8 +1,9 @@
-"""Unified runtime pruning engine (ISSUE 2): batched join-overlap and
-top-k boundary-init kernels vs their oracles; technique-executor parity —
-``PruningService.run_batch`` vs per-query ``PruningPipeline.run`` vs the
-host engine; per-technique launch bounding and counters; DML invalidation
-of the join-key / block-top-k planes; PruningReport.overall_ratio guard."""
+"""Unified runtime pruning engine (ISSUES 2+3): batched join-overlap,
+Bloom-probe and top-k boundary-init kernels vs their oracles; technique-
+executor parity — ``PruningService.run_batch`` vs per-query
+``PruningPipeline.run`` vs the host engine (distinct and Bloom summaries);
+per-technique launch bounding and counters; DML invalidation of the
+join-key / enumeration / block-top-k planes; overall_ratio guard."""
 
 import numpy as np
 import pytest
@@ -16,9 +17,11 @@ from repro.core.device_stats import DeviceStatsCache
 from repro.core.flow import (JoinSpec, PruningPipeline, PruningReport, Query,
                              TableScanSpec, TechniqueReport)
 from repro.core.metadata import FULL_MATCH, ScanSet
+from repro.core.prune_join import (BlockedBloom, prune_probe, summarize_build)
 from repro.core.prune_topk import TopKResult
 from repro.data.table import Table
-from repro.kernels import (join_overlap_batched, ops, ref, topk_init_batched)
+from repro.kernels import (bloom_probe_batched, join_overlap_batched, ops,
+                           ref, topk_init_batched)
 from repro.serve.prune_service import PruningService
 
 
@@ -151,6 +154,115 @@ class TestTopKInitBatchedKernel:
                                                    "interpret")
             np.testing.assert_array_equal(out_ref, out_int)
             np.testing.assert_array_equal(out_ref, _init_oracle(plane, mask, 4))
+
+
+# ---------------------------------------------------------------------------
+# bloom_probe_batched kernel (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def bloom_probe_problems(draw):
+    P = draw(st.integers(1, 300))
+    Q = draw(st.integers(1, 6))
+    enum_limit = draw(st.sampled_from([4, 32, 96]))
+    seed = draw(st.integers(0, 2**31))
+    return P, Q, enum_limit, seed
+
+
+def _make_bloom_inputs(P, Q, rng):
+    """Random enumeration plane (negative domains, non-narrow rows) and
+    Q filters of mixed NDV (mixed n_blocks exercises the tiling)."""
+    pmin = rng.integers(-5000, 5000, size=P).astype(np.int32)
+    width = rng.integers(0, 120, size=P).astype(np.int32)
+    width[rng.random(P) < 0.25] = 0
+    blooms = []
+    for _ in range(Q):
+        keys = np.unique(rng.integers(-6000, 6000,
+                                      size=int(rng.integers(10, 4000))))
+        b = BlockedBloom(len(keys))
+        b.add(keys)
+        blooms.append(b)
+    return pmin, width, blooms
+
+
+def _bloom_brute(blooms, pmin, width, enum_limit):
+    """The (fixed) host matcher's enumeration, partition by partition."""
+    Q, P = len(blooms), len(pmin)
+    hit = np.ones((Q, P), dtype=np.int32)
+    for qi, b in enumerate(blooms):
+        for p in range(P):
+            if 0 < width[p] <= enum_limit:
+                cand = np.int64(pmin[p]) + np.arange(width[p])
+                hit[qi, p] = int(b.contains(cand).any())
+    return hit
+
+
+class TestBloomProbeBatchedKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(problem=bloom_probe_problems())
+    def test_kernel_matches_oracle_and_host_matcher(self, problem):
+        """Device (interpret) == jnp oracle == host BlockedBloom probe,
+        bit for bit — the ISSUE 3 acceptance parity."""
+        P, Q, enum_limit, seed = problem
+        rng = np.random.default_rng(seed)
+        pmin, width, blooms = _make_bloom_inputs(P, Q, rng)
+        brute = _bloom_brute(blooms, pmin, width, enum_limit)
+        pmin_d = jnp.asarray(pmin)
+        width_d = jnp.asarray(width)
+        wmax = int(width.max()) if P else 0
+        out_i = ops.bloom_probe_batched_device(
+            blooms, pmin_d, width_d, wmax, enum_limit, mode="interpret")
+        np.testing.assert_array_equal(out_i, brute)
+        lo, hi = ops.pack_blooms(blooms)
+        weff = jnp.where(width_d <= enum_limit, width_d, 0)
+        eb = ops.enum_bucket(max(1, min(wmax, enum_limit)))
+        out_r = np.asarray(ref.bloom_probe_batched_ref(
+            jnp.asarray(lo), jnp.asarray(hi), pmin_d, weff, eb))[:Q]
+        np.testing.assert_array_equal(out_r, brute)
+
+    def test_sparse_fallback_matches_and_respects_part_ids(self):
+        """The no-Pallas fallback equals the kernel on the entries it is
+        allowed to read (each query's part_ids); other entries stay 1."""
+        rng = np.random.default_rng(4)
+        pmin, width, blooms = _make_bloom_inputs(500, 4, rng)
+        pmin_d, width_d = jnp.asarray(pmin), jnp.asarray(width)
+        wmax = int(width.max())
+        full = ops.bloom_probe_batched_device(
+            blooms, pmin_d, width_d, wmax, 64, mode="ref")
+        np.testing.assert_array_equal(
+            full, _bloom_brute(blooms, pmin, width, 64))
+        ids = [np.sort(rng.choice(500, size=80, replace=False))
+               for _ in blooms]
+        part = ops.bloom_probe_batched_device(
+            blooms, pmin_d, width_d, wmax, 64, mode="ref",
+            part_ids_lists=ids)
+        for qi, pid in enumerate(ids):
+            np.testing.assert_array_equal(part[qi, pid], full[qi, pid])
+            outside = np.setdiff1d(np.arange(500), pid)
+            assert (part[qi, outside] == 1).all()
+
+    def test_filter_tiling_preserves_probe_results(self):
+        """pack_blooms tiles filters to the common pow-2 block bucket;
+        probing under the larger mask must be identical — verified by
+        batching a small filter next to a much larger one."""
+        rng = np.random.default_rng(5)
+        small_keys = np.arange(40, dtype=np.int64)        # few blocks
+        big_keys = rng.integers(0, 10**6, size=30_000)    # many blocks
+        small, big = BlockedBloom(40), BlockedBloom(30_000)
+        small.add(small_keys)
+        big.add(np.unique(big_keys))
+        assert small.n_blocks < big.n_blocks
+        pmin = np.arange(0, 200, dtype=np.int32)
+        width = np.full(200, 3, dtype=np.int32)
+        solo = ops.bloom_probe_batched_device(
+            [small], jnp.asarray(pmin), jnp.asarray(width), 3, 64,
+            mode="interpret")
+        pair = ops.bloom_probe_batched_device(
+            [small, big], jnp.asarray(pmin), jnp.asarray(width), 3, 64,
+            mode="interpret")
+        np.testing.assert_array_equal(pair[0], solo[0])
+        np.testing.assert_array_equal(
+            pair[1], _bloom_brute([big], pmin, width, 64)[0])
 
 
 # ---------------------------------------------------------------------------
@@ -307,9 +419,10 @@ class TestUnifiedEngine:
             assert (rep.scan_sets["e"].match != FULL_MATCH).all()
             np.testing.assert_array_equal(rep.topk.values, oracle)
 
-    def test_bloom_summaries_fall_back_to_host(self):
-        """NDV above the distinct limit -> Bloom summary -> counted host
-        fallback, same scan sets as the host pipeline."""
+    def test_bloom_summaries_take_device_path(self):
+        """NDV above the distinct limit -> Bloom summary -> batched
+        enumeration launch (ISSUE 3), same scan sets as the host pipeline
+        and no host fallback on an integer key domain."""
         events, users = _engine_tables(seed=7)
         rng = np.random.default_rng(8)
         q = _mixed_workload(events, users, rng, n=2)[1]   # join query
@@ -317,12 +430,153 @@ class TestUnifiedEngine:
         pipe = PruningPipeline(filter_mode="device", service=svc,
                                join_ndv_limit=2)
         rep = svc.run_batch([q], pipe)[0]
-        assert rep.per_scan["e"]["join"].detail["path"] == "host"
+        assert rep.per_scan["e"]["join"].detail["path"] == "device"
         assert rep.per_scan["e"]["join"].detail["summary_kind"] == "bloom"
-        assert svc.counters.technique["join"]["fallbacks"] == 1
+        assert svc.counters.technique["join_bloom"]["launches"] == 1
+        assert svc.counters.technique["join_bloom"]["fallbacks"] == 0
+        assert "join" not in svc.counters.technique  # no distinct work
         host = PruningPipeline(filter_mode="host", join_ndv_limit=2).run(q)
         np.testing.assert_array_equal(rep.scan_sets["e"].part_ids,
                                       host.scan_sets["e"].part_ids)
+
+    def test_float_key_bloom_summaries_fall_back_to_host(self):
+        """A float probe key domain is ineligible for the integer
+        enumeration kernel: the Bloom path must keep the host matcher,
+        counted under join_bloom, with identical scan sets."""
+        rng = np.random.default_rng(9)
+        probe = Table.build(
+            "fp", {"k": rng.uniform(0, 100, 400)}, rows_per_partition=4)
+        build = Table.build(
+            "bld", {"k": rng.uniform(0, 100, 64)}, rows_per_partition=8)
+        q = Query(scans={"p": TableScanSpec(probe),
+                         "b": TableScanSpec(build)},
+                  join=JoinSpec("b", "p", "k", "k"))
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc,
+                               join_ndv_limit=4)
+        rep = svc.run_batch([q], pipe)[0]
+        assert rep.per_scan["p"]["join"].detail["summary_kind"] == "bloom"
+        assert rep.per_scan["p"]["join"].detail["path"] == "host"
+        assert svc.counters.technique["join_bloom"]["fallbacks"] == 1
+        assert svc.counters.technique["join_bloom"]["launches"] == 0
+        host = PruningPipeline(filter_mode="host", join_ndv_limit=4).run(q)
+        np.testing.assert_array_equal(rep.scan_sets["p"].part_ids,
+                                      host.scan_sets["p"].part_ids)
+
+
+def _bloom_mixed_workload(events, users, rng, n=24):
+    """Joins whose build NDV straddles a small ndv_limit: grp-filtered
+    builds (~50 ids) summarize as Bloom, id-capped builds (<= 6 ids) as
+    distinct — plus plain filter queries (run with join_ndv_limit=8)."""
+    qs = []
+    for i in range(n):
+        lo = int(rng.integers(0, 900_000))
+        pred = (E.col("ts") >= lo) & (E.col("ts") <= lo + 150_000)
+        g = int(rng.integers(0, 8))
+        kind = i % 3
+        if kind == 0:
+            qs.append(Query(scans={"e": TableScanSpec(events, pred)}))
+        elif kind == 1:   # Bloom summary: ~400/8 distinct build ids > 8
+            qs.append(Query(
+                scans={"e": TableScanSpec(events, pred),
+                       "u": TableScanSpec(users, E.col("grp") == g)},
+                join=JoinSpec("u", "e", "id", "uid")))
+        else:             # distinct summary: <= 6 build ids
+            qs.append(Query(
+                scans={"e": TableScanSpec(events, pred),
+                       "u": TableScanSpec(users, E.col("id") <= 5)},
+                join=JoinSpec("u", "e", "id", "uid")))
+    return qs
+
+
+class TestBloomEngineParity:
+    def test_mixed_distinct_bloom_batched_parity_and_launch_bounds(self):
+        """The ISSUE 3 acceptance shape: a mixed distinct/Bloom workload
+        where run_batch == per-query device == host pipeline, with one
+        distinct launch and one Bloom launch per (table, key col) group
+        and zero host fallbacks."""
+        events, users = _engine_tables(seed=23)
+        rng = np.random.default_rng(24)
+        queries = _bloom_mixed_workload(events, users, rng, n=24)
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc,
+                               join_ndv_limit=8)
+        before = svc.counters.snapshot()
+        batch = svc.run_batch(queries, pipe)
+        after = svc.counters.snapshot()
+        seq = [pipe.run(q) for q in queries]
+        for b, s in zip(batch, seq):
+            _assert_reports_equal(b, s)
+        host = PruningPipeline(filter_mode="host", join_ndv_limit=8)
+        for q, b in zip(queries, batch):
+            h = host.run(q)
+            for name in h.scan_sets:
+                np.testing.assert_array_equal(b.scan_sets[name].part_ids,
+                                              h.scan_sets[name].part_ids)
+        kinds = {b.per_scan["e"]["join"].detail["summary_kind"]
+                 for b in batch if "join" in b.per_scan.get("e", {})}
+        assert kinds == {"distinct", "bloom"}
+        delta = {t: {f: after["technique"][t][f]
+                     - before["technique"].get(t, dict(launches=0,
+                                                       fallbacks=0))[f]
+                     for f in ("launches", "fallbacks")}
+                 for t in after["technique"]}
+        assert delta["join"] == dict(launches=1, fallbacks=0)
+        assert delta["join_bloom"] == dict(launches=1, fallbacks=0)
+
+    def test_interpret_mode_engine_matches_ref(self):
+        """The Pallas kernel (interpret) drives the same engine results
+        as the jnp/numpy ref backend on a Bloom workload."""
+        events, users = _engine_tables(seed=25)
+        rng = np.random.default_rng(26)
+        queries = [q for q in _bloom_mixed_workload(events, users, rng, n=6)
+                   if q.join is not None]
+        out = {}
+        for mode in ("ref", "interpret"):
+            svc = PruningService(mode=mode)
+            pipe = PruningPipeline(filter_mode="device", service=svc,
+                                   join_ndv_limit=8)
+            out[mode] = svc.run_batch(queries, pipe)
+        for a, b in zip(out["ref"], out["interpret"]):
+            for name in a.scan_sets:
+                np.testing.assert_array_equal(a.scan_sets[name].part_ids,
+                                              b.scan_sets[name].part_ids)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        build=st.lists(st.one_of(st.integers(0, 300),
+                                 st.floats(0, 300, allow_nan=False)),
+                       min_size=5, max_size=60),
+        probe_seed=st.integers(0, 2**31),
+        float_probe=st.booleans(),
+    )
+    def test_device_bloom_never_prunes_joinable(self, build, probe_seed,
+                                                float_probe):
+        """Sec. 6.2 guarantee through the device path, integer and float
+        probe domains, fractional build keys included: a partition
+        containing a joinable key is never pruned, and on integer domains
+        the device result is bit-identical to the host matcher."""
+        rng = np.random.default_rng(probe_seed)
+        vals = (rng.uniform(0, 300, 160) if float_probe
+                else rng.integers(0, 300, 160).astype(np.int64))
+        probe = Table.build("p", {"k": vals}, rows_per_partition=4)
+        build_keys = np.asarray(build, dtype=np.float64)
+        summary = summarize_build(build_keys, ndv_limit=0)  # force Bloom
+        assert summary.bloom is not None
+        svc = PruningService(mode="ref")
+        scan = ScanSet.full(probe.num_partitions)
+        hit = svc.join_hit(probe, "k", summary, part_ids=scan.part_ids)
+        bh = None if hit is None else np.asarray(hit)[scan.part_ids] > 0
+        res = prune_probe(scan, probe.stats, "k", summary, bloom_hit=bh)
+        host = prune_probe(ScanSet.full(probe.num_partitions), probe.stats,
+                           "k", summary)
+        np.testing.assert_array_equal(res.scan.part_ids,
+                                      host.scan.part_ids)
+        kept = set(res.scan.part_ids.tolist())
+        for p in range(probe.num_partitions):
+            v, _ = probe.partition_ctx(p).col("k")
+            if np.isin(v, build_keys).any():
+                assert p in kept, f"pruned joinable partition {p}"
 
 
 # ---------------------------------------------------------------------------
@@ -386,6 +640,50 @@ class TestPlaneInvalidation:
         svc2, _, ev2, us2 = self._service_with_staged_planes()
         svc2.notify_delete("events")
         assert not any(k[0] == "events" for k in svc2.cache.topk_planes)
+
+    def test_enum_plane_column_granular_invalidation(self):
+        """The enumeration plane follows the join-key plane's DML
+        discipline: a key-column update re-stages it, an unrelated-column
+        update keeps it resident, insert/delete drop it."""
+        events, users = _engine_tables(seed=27)
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc,
+                               join_ndv_limit=8)
+        rng = np.random.default_rng(28)
+        work = _bloom_mixed_workload(events, users, rng, n=9)
+        svc.run_batch(work, pipe)
+        assert any(k[0] == "events" and k[2] == "uid"
+                   for k in svc.cache.enum_planes)
+        misses = svc.cache.plane_misses
+        svc.run_batch(work, pipe)
+        assert svc.cache.plane_misses == misses      # plane resident
+        svc.notify_update("events", "ts")            # unrelated column
+        svc.run_batch(work, pipe)
+        assert svc.cache.plane_misses == misses      # still resident
+        svc.notify_update("events", "uid")           # the join key column
+        assert not any(k[0] == "events" and k[2] == "uid"
+                       for k in svc.cache.enum_planes)
+        svc.run_batch(work, pipe)
+        assert svc.cache.plane_misses > misses       # re-staged
+        svc.notify_insert("events", 1)
+        assert not any(k[0] == "events" for k in svc.cache.enum_planes)
+
+    def test_enum_plane_guards_non_enumerable_rows(self):
+        """Width rows are 0 (= keep, never prune) wherever enumeration
+        would be unsound: empty intervals and out-of-int32 bounds."""
+        cache = DeviceStatsCache()
+        big = np.array([0, 1, 2**40, 2**40 + 1, 5, 6], dtype=np.int64)
+        t = Table.build("t", {"k": big}, rows_per_partition=2,
+                        nulls={"k": np.array([0, 0, 0, 0, 1, 1], bool)})
+        pmin, width, wmax, domain_ok = cache.enum_plane(t, "k")
+        width = np.asarray(width)
+        assert width[1] == 0                 # 2**40 range: outside int32
+        assert width[2] == 0                 # all-null partition: empty
+        assert width[0] == 2 and wmax == 2   # [0, 1] enumerates fine
+        assert not domain_ok                 # a live partition exceeds int32
+        small = Table.build("s", {"k": np.arange(8, dtype=np.int64)},
+                            rows_per_partition=4)
+        assert cache.enum_plane(small, "k")[3]
 
     def test_rebuilt_table_never_hits_stale_plane(self):
         """Same name + shape, new data: stats.uid keying must re-stage
@@ -470,3 +768,7 @@ class TestBenchSmoke:
             payload = _json.load(f)
         assert payload["bench"] == "runtime_prune"
         assert len(payload["grid"]) == 1
+        # Bloom cell: batched enumeration launches, no host fallbacks
+        assert payload["bloom"]["bloom_launches"] >= 1
+        assert payload["bloom"]["bloom_fallbacks"] == 0
+        assert "bloom_qps_delta" in payload["acceptance"]

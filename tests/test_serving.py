@@ -56,3 +56,22 @@ class TestContinuousBatching:
         b = batcher.submit(rng.integers(0, cfg.vocab, size=12), max_new=8)
         out = batcher.run()
         assert len(out[a]) == 2 and len(out[b]) == 8
+
+    def test_overlong_prompt_rejected_at_submit(self, setup):
+        """Regression (ISSUE 3): _admit never validated prompt length, so
+        an over-long prompt wrote past the slot's KV region and started
+        positions[slot] beyond max_seq.  submit must reject it up front
+        (prompt == max_seq is also too long: decode needs one position)."""
+        cfg, model, params = setup
+        rng = np.random.default_rng(3)
+        batcher = ContinuousBatcher(model, params, n_slots=2, max_seq=16)
+        with pytest.raises(ValueError, match="slot capacity"):
+            batcher.submit(rng.integers(0, cfg.vocab, size=40), max_new=2)
+        with pytest.raises(ValueError, match="slot capacity"):
+            batcher.submit(rng.integers(0, cfg.vocab, size=16), max_new=2)
+        assert not batcher.queue                 # nothing was admitted
+        rid = batcher.submit(rng.integers(0, cfg.vocab, size=15), max_new=4)
+        out = batcher.run()
+        # the slot fills after one decode (15 + 1 == max_seq): the request
+        # still finishes cleanly inside its KV region
+        assert 1 <= len(out[rid]) <= 4 and batcher.active() == 0
