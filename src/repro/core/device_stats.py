@@ -147,16 +147,61 @@ def snap_bounds_integral(
     return los, his
 
 
+def plane_capacity(p: int) -> int:
+    """Padded partition capacity for delta-staged planes.
+
+    Next power of two with at least 25% append headroom over ``p``, so a
+    streaming table absorbs many appends before a capacity overflow
+    forces a full restage.  Capacity slots beyond the logical partition
+    count hold drop sentinels — every batched kernel treats them as
+    never-matching, so no reshape is needed when partitions arrive.
+    """
+    want = max(8, p + max(p // 4, 1))
+    cap = 8
+    while cap < want:
+        cap *= 2
+    return cap
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneEpoch:
+    """What a resident plane reflects: (table version, live count, capacity).
+
+    The service and the technique executors carry this alongside batched
+    launches so a delta-staged launch is checkable against (and stays
+    bit-identical to) a fresh host restage of the same table version.
+    """
+
+    version: int
+    live: int
+    capacity: int
+
+
 @dataclasses.dataclass
 class DeviceStats:
-    """A table's resident metadata plane: [C, P] device arrays, f32."""
+    """A table's resident metadata plane: [C, cap] device arrays, f32.
+
+    ``capacity >= logical_p``; columns ``logical_p..capacity`` (and
+    dropped partitions inside ``logical_p``) hold the drop sentinel
+    ``(+f32max, -f32max, demote=1)`` — an empty interval that every
+    batched kernel evaluates as NO_MATCH / no-hit / no contribution.
+    """
 
     table_name: str
-    version: int
-    mins: jnp.ndarray      # [C, P] widened (rounded toward -inf)
-    maxs: jnp.ndarray      # [C, P] widened (rounded toward +inf)
-    demote: jnp.ndarray    # [C, P] 1.0 where nulls or inexact cast: no FULL
+    version: int           # table DML version the planes reflect
+    mins: jnp.ndarray      # [C, cap] widened (rounded toward -inf)
+    maxs: jnp.ndarray      # [C, cap] widened (rounded toward +inf)
+    demote: jnp.ndarray    # [C, cap] 1.0 where nulls or inexact cast: no FULL
     integral: np.ndarray   # [C] bool, host-side: int/dictionary-code column
+    logical_p: int = -1    # partitions staged (-1: dense, infer from arrays)
+    live_count: int = -1
+    tv_version: Optional[int] = None   # service TableVersion seen at staging
+
+    def __post_init__(self):
+        if self.logical_p < 0:
+            self.logical_p = int(self.mins.shape[1])
+        if self.live_count < 0:
+            self.live_count = self.logical_p
 
     @property
     def num_columns(self) -> int:
@@ -164,17 +209,25 @@ class DeviceStats:
 
     @property
     def num_partitions(self) -> int:
-        return self.mins.shape[1]
+        return self.logical_p
+
+    @property
+    def capacity(self) -> int:
+        return int(self.mins.shape[1])
+
+    @property
+    def epoch(self) -> PlaneEpoch:
+        return PlaneEpoch(self.version, self.live_count, self.capacity)
 
     @property
     def nbytes(self) -> int:
         return int(self.mins.nbytes + self.maxs.nbytes + self.demote.nbytes)
 
     def gather(self, cids: np.ndarray):
-        """On-device row gather -> per-constraint [K, P] planes.
+        """On-device row gather -> per-constraint [K, cap] planes.
 
         This replaces the old host transpose + H2D copy per query; the
-        resident [C, P] arrays never leave the device.
+        resident [C, cap] arrays never leave the device.
         """
         cids = jnp.asarray(np.asarray(cids, dtype=np.int32))
         return (jnp.take(self.mins, cids, axis=0),
@@ -183,12 +236,30 @@ class DeviceStats:
 
     @staticmethod
     def stage(stats: PartitionStats, table_name: str = "",
-              version: int = 0) -> "DeviceStats":
-        """Host [P, C] f64 stats -> device [C, P] f32 planes (one H2D copy)."""
+              version: int = 0, capacity: Optional[int] = None,
+              live: Optional[np.ndarray] = None) -> "DeviceStats":
+        """Host [P, C] f64 stats -> device [C, cap] f32 planes (one H2D copy).
+
+        ``capacity=None`` stages dense (exact [C, P] — the classic
+        one-shot path); the cache passes ``plane_capacity(P)`` so the
+        staged planes absorb appended partitions in place.
+        """
+        P = stats.num_partitions
+        cap = P if capacity is None else max(int(capacity), P)
         mins32, maxs32, inexact = cast_stats_f32(stats.mins.T, stats.maxs.T)
         demote = ((stats.null_counts.T > 0) | inexact).astype(np.float32)
+        if cap > P:
+            C = len(stats.columns)
+            pad = cap - P
+            mins32 = np.concatenate(
+                [mins32, np.full((C, pad), _F32_MAX, np.float32)], axis=1)
+            maxs32 = np.concatenate(
+                [maxs32, np.full((C, pad), -_F32_MAX, np.float32)], axis=1)
+            demote = np.concatenate(
+                [demote, np.ones((C, pad), np.float32)], axis=1)
         integral = np.array([c.kind != "float" for c in stats.columns],
                             dtype=bool)
+        live_count = P if live is None else int(np.asarray(live, bool).sum())
         return DeviceStats(
             table_name=table_name,
             version=version,
@@ -196,22 +267,70 @@ class DeviceStats:
             maxs=jnp.asarray(maxs32),
             demote=jnp.asarray(demote),
             integral=integral,
+            logical_p=P,
+            live_count=live_count,
         )
 
 
 KPLANE = 64   # block-top-k plane width: values kept per partition
 
 
-class DeviceStatsCache:
-    """Once-per-table-version staging of metadata planes, LRU-bounded.
+@dataclasses.dataclass
+class _PlaneEntry:
+    """A resident per-column plane: device arrays + the version staged.
 
-    Keys are ``(table_name, version, stats.uid)``: the version is the DML
-    identity ``predicate_cache.TableVersion`` tracks (insert_partitions,
-    delete, order-column update bump it and naturally miss), and the
-    stats uid distinguishes a *rebuilt* table — same name, same shape,
-    new data — from the object that was staged, so a stale plane can
-    never serve it.  Superseded same-table (same-uid) entries are dropped
-    eagerly; entries of dead rebuilt tables age out via the LRU bound.
+    ``arrays`` are capacity-padded along the partition axis (axis 0);
+    slots beyond ``logical_p`` and dropped partitions hold the family's
+    sentinel.  ``meta`` carries host-side extras (enum wmax/domain_ok).
+    """
+
+    version: int
+    logical_p: int
+    arrays: Tuple
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.arrays[0].shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(int(a.nbytes) for a in self.arrays))
+
+
+class DeviceStatsCache:
+    """Once-per-table staging of metadata planes, delta-synced, LRU-bounded.
+
+    Keys are ``(table_name, stats.uid)``: the stats uid distinguishes a
+    *rebuilt* table — same name, same shape, new data — from the object
+    that was staged, so a stale plane can never serve it.  Entries of
+    dead rebuilt tables age out via the LRU bound.
+
+    Delta staging (incremental ingest)
+    ----------------------------------
+    Resident entries record the table DML ``version`` they reflect (and
+    the service ``TableVersion`` seen at staging).  When a table's
+    version advances through its own DML methods (``append_partitions``
+    / ``drop_partitions`` / ``update_column``), ``get`` and the
+    per-column plane getters *replay* the table's ``TableDelta`` log
+    instead of restaging:
+
+      * **append**: planes were allocated with ``plane_capacity`` slack,
+        so only the new ``[C, ΔP]`` columns are staged in place;
+      * **drop**: dropped partitions are scattered with the no-op
+        sentinel ``(+f32max, -f32max, demote=1)`` — all batched kernels
+        skip them without any reshape;
+      * **update(column)**: the [C, P] planes restage only that column's
+        three rows; per-column planes of *other* columns advance their
+        version with zero staging work (the satellite-3 guarantee);
+      * **rewrite** (or a log gap / capacity overflow): full restage —
+        the only cases that pay O(table) again.
+
+    ``staged_bytes`` / ``delta_stages`` / ``full_restages`` count the
+    work; ``PruningService.run_batch`` surfaces the per-batch delta via
+    ``PruningReport.counters['staging']``.  A version bump *without* a
+    covering delta log (legacy ``TableVersion`` bumps) always full
+    restages — never wrong, just slower.
 
     Runtime-technique planes (PR 2)
     -------------------------------
@@ -238,84 +357,272 @@ class DeviceStatsCache:
     """
 
     def __init__(self, max_entries: int = 16, max_planes: int = 64):
+        # (name, uid) -> DeviceStats ([C, cap] planes + epoch)
         self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
-        # (name, uid, col) -> (pmin [P], pmax [P]) widened f32 device rows
-        self.key_planes: "OrderedDict[Tuple, Tuple]" = OrderedDict()
-        # (name, uid, col) -> (pmin [P] i32, width [P] i32, wmax int)
-        self.enum_planes: "OrderedDict[Tuple, Tuple]" = OrderedDict()
-        # (name, uid, col, desc, k) -> [P, k] signed block-top-k device rows
-        self.topk_planes: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
+        # (name, uid, col) -> _PlaneEntry((pmin, pmax) [cap] f32 rows)
+        self.key_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        # (name, uid, col) -> _PlaneEntry((pmin, width) [cap] i32 rows,
+        #                                 meta: wmax, domain_ok)
+        self.enum_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        # (name, uid, col, desc, k) -> _PlaneEntry(([cap, k] signed rows,))
+        self.topk_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
         self.max_planes = max_planes
         self.plane_hits = 0
         self.plane_misses = 0
+        # staging-work counters (H2D bytes; delta vs full attribution)
+        self.staged_bytes = 0
+        self.delta_stages = 0      # successful delta replays (any family)
+        self.full_restages = 0     # full restagings of previously-resident
+                                   # planes (rewrite / log gap / overflow)
+
+    # ---- version / delta-log plumbing ----------------------------------
 
     @staticmethod
-    def _key(table, tv: Optional[TableVersion]) -> Tuple:
-        # stats.uid guards against a rebuilt table (same name, same shape,
-        # new data) silently hitting the stale staged plane — stale stats
-        # would break NO_MATCH safety, the one direction that loses rows.
-        version = tv.version if tv is not None else 0
-        return (table.name, version, table.stats.uid)
+    def _table_version(table) -> int:
+        return int(getattr(table, "version", 0))
+
+    @staticmethod
+    def _deltas_since(table, version: int):
+        """Ordered TableDeltas in (version, table.version], or None when
+        the log has been compacted past ``version`` (full restage)."""
+        deltas = getattr(table, "deltas", None)
+        if deltas is None:
+            return None
+        if version < int(getattr(table, "delta_floor", 0)):
+            return None
+        return [d for d in deltas if d.version > version]
+
+    @staticmethod
+    def _live_count(table) -> int:
+        return int(getattr(table, "num_live_partitions",
+                           table.stats.num_partitions))
+
+    def staging_snapshot(self) -> dict:
+        return dict(staged_bytes=self.staged_bytes,
+                    delta_stages=self.delta_stages,
+                    full_restages=self.full_restages)
+
+    def plane_epoch(self, table) -> Optional[PlaneEpoch]:
+        """The resident [C, cap] plane's epoch for this table, if staged."""
+        e = self.entries.get((table.name, table.stats.uid))
+        return e.epoch if e is not None else None
+
+    # ---- [C, cap] stat planes ------------------------------------------
+
+    @staticmethod
+    def _stat_cols(stats: PartitionStats, lo: int, hi: int):
+        """Host f32 plane columns for partitions [lo, hi) (delta slice)."""
+        m32, x32, inexact = cast_stats_f32(stats.mins[lo:hi].T,
+                                           stats.maxs[lo:hi].T)
+        dm = ((stats.null_counts[lo:hi].T > 0) | inexact).astype(np.float32)
+        return m32, x32, dm
+
+    def _replay_stats(self, e: DeviceStats, table, deltas) -> bool:
+        """Bring a resident [C, cap] entry current by replaying deltas.
+
+        Returns False when a full restage is required (rewrite delta,
+        capacity overflow, unknown kind); on success only the changed
+        partition columns were staged.
+        """
+        stats = table.stats
+        if stats.num_partitions > e.capacity:
+            return False
+        mins, maxs, dem = e.mins, e.maxs, e.demote
+        nbytes = 0
+        for d in deltas:
+            if d.kind == "append":
+                m32, x32, dm = self._stat_cols(stats, d.part_lo, d.part_hi)
+                sl = slice(d.part_lo, d.part_hi)
+                mins = mins.at[:, sl].set(jnp.asarray(m32))
+                maxs = maxs.at[:, sl].set(jnp.asarray(x32))
+                dem = dem.at[:, sl].set(jnp.asarray(dm))
+                nbytes += int(m32.nbytes + x32.nbytes + dm.nbytes)
+            elif d.kind == "drop":
+                ids = jnp.asarray(np.asarray(d.part_ids, dtype=np.int32))
+                mins = mins.at[:, ids].set(_F32_MAX)
+                maxs = maxs.at[:, ids].set(-_F32_MAX)
+                dem = dem.at[:, ids].set(np.float32(1.0))
+                nbytes += 3 * e.num_columns * len(d.part_ids) * 4
+            elif d.kind == "update":
+                try:
+                    ci = stats.col_id(d.column)
+                except KeyError:
+                    return False
+                P = stats.num_partitions
+                m32, x32, inexact = cast_stats_f32(
+                    stats.mins[:, ci][None, :], stats.maxs[:, ci][None, :])
+                dm = ((stats.null_counts[:, ci][None, :] > 0)
+                      | inexact).astype(np.float32)
+                mins = mins.at[ci, :P].set(jnp.asarray(m32[0]))
+                maxs = maxs.at[ci, :P].set(jnp.asarray(x32[0]))
+                dem = dem.at[ci, :P].set(jnp.asarray(dm[0]))
+                nbytes += 3 * P * 4
+            else:                      # rewrite (or unknown): full restage
+                return False
+        e.mins, e.maxs, e.demote = mins, maxs, dem
+        e.logical_p = stats.num_partitions
+        e.live_count = self._live_count(table)
+        self.staged_bytes += nbytes
+        self.delta_stages += 1
+        return True
 
     def get(self, table, tv: Optional[TableVersion] = None) -> DeviceStats:
-        """The table's resident DeviceStats, staging on first touch."""
-        key = self._key(table, tv)
+        """The table's resident DeviceStats: staged on first touch,
+        delta-synced on table DML, fully restaged only when it must be.
+
+        stats.uid guards against a rebuilt table (same name, same shape,
+        new data) silently hitting the stale staged plane — stale stats
+        would break NO_MATCH safety, the one direction that loses rows.
+        A service ``TableVersion`` bump without a covering table delta
+        log (legacy invalidation flow) also forces a restage.
+        """
+        key = (table.name, table.stats.uid)
+        tvv = tv.version if tv is not None else None
+        tver = self._table_version(table)
         e = self.entries.get(key)
         if e is not None:
-            self.hits += 1
-            self.entries.move_to_end(key)
-            return e
+            if e.version == tver and (tvv is None or e.tv_version in
+                                      (None, tvv)):
+                self.hits += 1
+                if tvv is not None:
+                    e.tv_version = tvv
+                self.entries.move_to_end(key)
+                return e
+            if e.version < tver:
+                deltas = self._deltas_since(table, e.version)
+                if deltas is not None and self._replay_stats(e, table, deltas):
+                    e.version = tver
+                    e.tv_version = tvv
+                    self.hits += 1
+                    self.entries.move_to_end(key)
+                    return e
+            # stale and not replayable: rebuild below
+            self.full_restages += 1
         self.misses += 1
-        # A version bump supersedes older stagings of the same table
-        # object (same uid).  Same-name entries with a different uid are
-        # other live tables sharing the name — left alone (LRU bounds
-        # them), so alternating tables don't thrash each other.
-        stale = [k for k in self.entries
-                 if k[0] == table.name and k[2] == table.stats.uid]
-        for k in stale:
-            del self.entries[k]
-        e = DeviceStats.stage(table.stats, table.name, key[1])
+        e = DeviceStats.stage(
+            table.stats, table.name, tver,
+            capacity=plane_capacity(table.stats.num_partitions),
+            live=getattr(table, "live", None))
+        e.tv_version = tvv
+        self.staged_bytes += e.nbytes
         self.entries[key] = e
+        self.entries.move_to_end(key)
         while len(self.entries) > self.max_entries:
             self.entries.popitem(last=False)
         return e
 
     # ---- runtime-technique planes --------------------------------------
 
-    def _plane_get(self, store: "OrderedDict", key: Tuple):
+    def _plane_current(self, store: "OrderedDict", key: Tuple, table,
+                       column: str, append_fn, drop_fn):
+        """Return the resident plane entry brought current, or None.
+
+        Replays the table's delta log against the entry: appends stage
+        only the new partitions (``append_fn``), drops scatter the
+        family's sentinel (``drop_fn``), updates of *other* columns are
+        free version advances.  An update of ``column`` itself, a
+        rewrite, a log gap, or capacity overflow drops the entry (the
+        caller stages fresh, counted as a plane miss + full restage).
+        """
         e = store.get(key)
-        if e is not None:
+        if e is None:
+            return None
+        tver = self._table_version(table)
+        if e.version == tver:
             self.plane_hits += 1
             store.move_to_end(key)
-        return e
+            return e
+        ok = False
+        if e.version < tver:
+            deltas = self._deltas_since(table, e.version)
+            if deltas is not None and \
+                    table.stats.num_partitions <= e.capacity:
+                ok = True
+                staged = False
+                nbytes = 0
+                for d in deltas:
+                    if d.kind == "append":
+                        nbytes += append_fn(e, table, d.part_lo, d.part_hi)
+                        staged = True
+                    elif d.kind == "drop":
+                        nbytes += drop_fn(e, table, d.part_ids)
+                        staged = True
+                    elif d.kind == "update" and d.column != column:
+                        continue
+                    else:
+                        ok = False
+                        break
+                if ok:
+                    e.version = tver
+                    e.logical_p = table.stats.num_partitions
+                    self.staged_bytes += nbytes
+                    if staged:
+                        self.delta_stages += 1
+                    self.plane_hits += 1
+                    store.move_to_end(key)
+                    return e
+        del store[key]
+        self.full_restages += 1
+        return None
 
-    def _plane_put(self, store: "OrderedDict", key: Tuple, entry):
+    def _plane_put(self, store: "OrderedDict", key: Tuple,
+                   entry: _PlaneEntry) -> _PlaneEntry:
         self.plane_misses += 1
+        self.staged_bytes += entry.nbytes
         store[key] = entry
         while len(store) > self.max_planes:
             store.popitem(last=False)
         return entry
 
-    def join_key_plane(self, table, key_col: str) -> Tuple:
-        """The key column's resident (pmin, pmax) [P] f32 rows (widened).
+    # -- join-key planes --
 
-        Staged once per (table identity, column); consumed by the batched
-        join-overlap kernel.  Clamped to finite f32 like the [C, P]
-        planes, so +inf distinct-key padding can never produce a hit.
+    def _key_rows(self, table, key_col: str, lo: int, hi: int):
+        """Widened f32 (pmin, pmax) host rows for partitions [lo, hi)."""
+        pmin = np.clip(round_down_f32(table.stats.col_min(key_col)[lo:hi]),
+                       -_F32_MAX, _F32_MAX).astype(np.float32)
+        pmax = np.clip(round_up_f32(table.stats.col_max(key_col)[lo:hi]),
+                       -_F32_MAX, _F32_MAX).astype(np.float32)
+        return pmin, pmax
+
+    def _key_append(self, e: _PlaneEntry, table, lo: int, hi: int) -> int:
+        pmin, pmax = self._key_rows(table, e.meta["col"], lo, hi)
+        a, b = e.arrays
+        e.arrays = (a.at[lo:hi].set(jnp.asarray(pmin)),
+                    b.at[lo:hi].set(jnp.asarray(pmax)))
+        return int(pmin.nbytes + pmax.nbytes)
+
+    def _key_drop(self, e: _PlaneEntry, table, part_ids) -> int:
+        ids = jnp.asarray(np.asarray(part_ids, dtype=np.int32))
+        a, b = e.arrays
+        e.arrays = (a.at[ids].set(_F32_MAX), b.at[ids].set(-_F32_MAX))
+        return 2 * len(part_ids) * 4
+
+    def join_key_plane(self, table, key_col: str) -> Tuple:
+        """The key column's resident (pmin, pmax) [cap] f32 rows (widened).
+
+        Staged once per (table identity, column) and delta-synced on
+        table DML; consumed by the batched join-overlap kernel.  Clamped
+        to finite f32 like the [C, cap] planes, so +inf distinct-key
+        padding can never produce a hit; dropped/capacity slots hold the
+        empty-interval sentinel (+f32max, -f32max) — never a hit either.
         """
         key = (table.name, table.stats.uid, key_col)
-        e = self._plane_get(self.key_planes, key)
+        e = self._plane_current(self.key_planes, key, table, key_col,
+                                self._key_append, self._key_drop)
         if e is not None:
-            return e
-        pmin = np.clip(round_down_f32(table.stats.col_min(key_col)),
-                       -_F32_MAX, _F32_MAX).astype(np.float32)
-        pmax = np.clip(round_up_f32(table.stats.col_max(key_col)),
-                       -_F32_MAX, _F32_MAX).astype(np.float32)
-        return self._plane_put(self.key_planes, key,
-                               (jnp.asarray(pmin), jnp.asarray(pmax)))
+            return e.arrays
+        P = table.stats.num_partitions
+        cap = plane_capacity(P)
+        pmin = np.full(cap, _F32_MAX, dtype=np.float32)
+        pmax = np.full(cap, -_F32_MAX, dtype=np.float32)
+        pmin[:P], pmax[:P] = self._key_rows(table, key_col, 0, P)
+        e = _PlaneEntry(self._table_version(table), P,
+                        (jnp.asarray(pmin), jnp.asarray(pmax)),
+                        meta=dict(col=key_col))
+        return self._plane_put(self.key_planes, key, e).arrays
 
     def enum_plane(self, table, key_col: str) -> Tuple:
         """The key column's resident enumeration rows:
@@ -337,13 +644,38 @@ class DeviceStatsCache:
         (``PruningService.join_device_eligible``), computed once here so
         eligibility never rescans [P] stats per query.
 
-        Same (table identity, column) keying and column-granular
-        ``notify_update`` invalidation as ``join_key_plane``.
+        Same (table identity, column) keying, delta-sync, and
+        column-granular invalidation as ``join_key_plane``; width-0 is
+        also the drop/capacity sentinel (a dropped partition is never
+        enumerated, i.e. kept — which its absence from every scan set
+        then makes irrelevant).
         """
         key = (table.name, table.stats.uid, key_col)
-        e = self._plane_get(self.enum_planes, key)
+        e = self._plane_current(self.enum_planes, key, table, key_col,
+                                self._enum_append, self._enum_drop)
         if e is not None:
-            return e
+            return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
+        P = table.stats.num_partitions
+        cap = plane_capacity(P)
+        pmin_h, width_h, wmax, domain_ok = self._enum_rows(table, key_col)
+        pmin = np.zeros(cap, dtype=np.int32)
+        width = np.zeros(cap, dtype=np.int32)
+        pmin[:P], width[:P] = pmin_h, width_h
+        e = _PlaneEntry(self._table_version(table), P,
+                        (jnp.asarray(pmin), jnp.asarray(width)),
+                        meta=dict(col=key_col, wmax=wmax,
+                                  domain_ok=domain_ok))
+        e = self._plane_put(self.enum_planes, key, e)
+        return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
+
+    @staticmethod
+    def _enum_rows(table, key_col: str):
+        """Host enumeration rows over all partitions:
+        (pmin i32 [P], width i32 [P], wmax, domain_ok) — exact recompute,
+        shared by fresh staging and delta replay (the replay stages only
+        the changed slices but refreshes wmax/domain_ok exactly, so the
+        delta path choses the same kernel-vs-host route as a fresh one).
+        """
         lo = np.ceil(np.asarray(table.stats.col_min(key_col), np.float64))
         hi = np.floor(np.asarray(table.stats.col_max(key_col), np.float64))
         with np.errstate(invalid="ignore", over="ignore"):
@@ -355,9 +687,25 @@ class DeviceStatsCache:
         pmin = np.where(ok, lo, 0.0).astype(np.int32)
         width = np.where(ok, wf, 0.0).astype(np.int32)
         wmax = int(width.max()) if width.size else 0
-        return self._plane_put(self.enum_planes, key,
-                               (jnp.asarray(pmin), jnp.asarray(width), wmax,
-                                domain_ok))
+        return pmin, width, wmax, domain_ok
+
+    def _enum_append(self, e: _PlaneEntry, table, lo: int, hi: int) -> int:
+        pmin_h, width_h, wmax, domain_ok = self._enum_rows(table,
+                                                           e.meta["col"])
+        a, b = e.arrays
+        e.arrays = (a.at[lo:hi].set(jnp.asarray(pmin_h[lo:hi])),
+                    b.at[lo:hi].set(jnp.asarray(width_h[lo:hi])))
+        e.meta.update(wmax=wmax, domain_ok=domain_ok)
+        return 2 * (hi - lo) * 4
+
+    def _enum_drop(self, e: _PlaneEntry, table, part_ids) -> int:
+        ids = jnp.asarray(np.asarray(part_ids, dtype=np.int32))
+        a, b = e.arrays
+        e.arrays = (a.at[ids].set(np.int32(0)), b.at[ids].set(np.int32(0)))
+        _pmin, _width, wmax, domain_ok = self._enum_rows(table,
+                                                         e.meta["col"])
+        e.meta.update(wmax=wmax, domain_ok=domain_ok)
+        return 2 * len(part_ids) * 4
 
     def block_topk_plane(self, table, order_col: str, desc: bool,
                          k_plane: int = KPLANE) -> jnp.ndarray:
@@ -371,18 +719,57 @@ class DeviceStatsCache:
         """
         key = (table.name, table.stats.uid, order_col, bool(desc),
                int(k_plane))
-        e = self._plane_get(self.topk_planes, key)
+        e = self._plane_current(self.topk_planes, key, table, order_col,
+                                self._topk_append, self._topk_drop)
         if e is not None:
-            return e
+            return e.arrays[0]
+        P = table.stats.num_partitions
+        cap = plane_capacity(P)
+        rows = np.full((cap, int(k_plane)), -np.inf, dtype=np.float32)
+        rows[:P] = self._topk_rows(table, order_col, bool(desc),
+                                   int(k_plane), 0, P)
+        e = _PlaneEntry(self._table_version(table), P, (jnp.asarray(rows),),
+                        meta=dict(col=order_col, desc=bool(desc)))
+        return self._plane_put(self.topk_planes, key, e).arrays[0]
+
+    @staticmethod
+    def _topk_rows(table, order_col: str, desc: bool, k_plane: int,
+                   lo: int, hi: int) -> np.ndarray:
+        """Signed block-top-k host rows for partitions [lo, hi).
+
+        Rows of dropped partitions are all -inf (the no-contribution
+        sentinel): their tombstoned data rows must never witness a
+        boundary, and a fresh restage produces the same rows as the
+        delta path's sentinel scatter.
+        """
         from ..kernels.ops import build_block_topk  # lazy: ops imports us
         sign = 1.0 if desc else -1.0
         sv = round_down_f32(sign * np.asarray(table.data[order_col],
                                               dtype=np.float64))
         nm = table.nulls.get(order_col)
         mask = None if nm is None else ~np.asarray(nm, dtype=bool)
-        rows = build_block_topk(sv.astype(np.float32), table.part_bounds,
+        live = getattr(table, "live", None)
+        if live is not None:
+            live_rows = np.repeat(np.asarray(live, dtype=bool),
+                                  np.diff(table.part_bounds))
+            mask = live_rows if mask is None else (mask & live_rows)
+        return build_block_topk(sv.astype(np.float32),
+                                table.part_bounds[lo:hi + 1],
                                 int(k_plane), mask=mask)
-        return self._plane_put(self.topk_planes, key, jnp.asarray(rows))
+
+    def _topk_append(self, e: _PlaneEntry, table, lo: int, hi: int) -> int:
+        (rows,) = e.arrays
+        k_plane = int(rows.shape[1])
+        new = self._topk_rows(table, e.meta["col"],
+                              e.meta["desc"], k_plane, lo, hi)
+        e.arrays = (rows.at[lo:hi].set(jnp.asarray(new)),)
+        return int(new.nbytes)
+
+    def _topk_drop(self, e: _PlaneEntry, table, part_ids) -> int:
+        ids = jnp.asarray(np.asarray(part_ids, dtype=np.int32))
+        (rows,) = e.arrays
+        e.arrays = (rows.at[ids].set(-jnp.inf),)
+        return len(part_ids) * int(rows.shape[1]) * 4
 
     def invalidate(self, table_name: str, column: Optional[str] = None
                    ) -> None:
@@ -427,10 +814,10 @@ class DeviceStatsCache:
 
     @property
     def resident_bytes(self) -> int:
+        # (the enum store used to be summed with a stale 3-tuple unpack
+        # that raised once any enum plane was resident; the generic
+        # _PlaneEntry walk fixes that)
         total = sum(e.nbytes for e in self.entries.values())
-        total += sum(int(a.nbytes) + int(b.nbytes)
-                     for a, b in self.key_planes.values())
-        total += sum(int(a.nbytes) + int(b.nbytes)
-                     for a, b, _w in self.enum_planes.values())
-        total += sum(int(r.nbytes) for r in self.topk_planes.values())
+        for store in (self.key_planes, self.enum_planes, self.topk_planes):
+            total += sum(e.nbytes for e in store.values())
         return total

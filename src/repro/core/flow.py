@@ -43,7 +43,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import expr as E
-from .metadata import NO_MATCH, PARTIAL_MATCH, ScanSet, pruning_ratio
+from .metadata import (NO_MATCH, PARTIAL_MATCH, ScanSet, live_full_scan,
+                       mask_dead_partitions, pruning_ratio)
 from .prune_filter import eval_tv
 from .prune_join import BuildSummary, prune_probe, summarize_build
 from .prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING, UNSUPPORTED_SHAPE,
@@ -212,7 +213,7 @@ class FilterTechnique(Technique):
         table = spec.table
         P = table.num_partitions
         if not pipe.enable_filter or isinstance(spec.pred, E.TruePred):
-            ss = ScanSet.full(P)
+            ss = live_full_scan(table)
             if not isinstance(spec.pred, E.TruePred):
                 # Filter disabled but a predicate exists: no partition is
                 # *certified* fully matching — FULL here would let the
@@ -220,8 +221,8 @@ class FilterTechnique(Technique):
                 # (host and device) trust uncertified rows and drop true
                 # results.
                 ss = ScanSet(ss.part_ids,
-                             np.full(P, PARTIAL_MATCH, dtype=np.int8))
-            return ss, TechniqueReport(P, P, applied=False)
+                             np.full(len(ss), PARTIAL_MATCH, dtype=np.int8))
+            return ss, TechniqueReport(P, len(ss), applied=False)
         if pipe.adaptive:
             res = AdaptivePruner(spec.pred).run(table.stats,
                                                batch_size=max(P // 8, 1))
@@ -230,10 +231,15 @@ class FilterTechnique(Technique):
             tv = None
             if pipe.filter_mode == "device":
                 # Delegate to the PruningService: resident device stats
-                # (staged once per table version) + the batched kernel.
+                # (staged once, delta-synced on DML) + the batched kernel.
+                # The plane's PlaneEpoch (version/live/capacity) is
+                # surfaced batch-level via PruningReport.counters.
                 tv = pipe.device_service().scan_tv(spec)
             if tv is None:
                 tv = eval_tv(spec.pred, table.stats)
+        # Dropped partitions never enter a scan set, on any path — the
+        # same mask the device plane encodes as sentinel slots.
+        tv = mask_dead_partitions(tv, table)
         keep = tv > NO_MATCH
         ss = ScanSet(np.where(keep)[0], tv[keep])
         return ss, TechniqueReport(P, len(ss), applied=True)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +69,26 @@ class ColumnMeta:
         return float(lo), float(hi)
 
 
+@dataclasses.dataclass(frozen=True)
+class TableDelta:
+    """One logged DML step, replayable by resident metadata planes.
+
+    The device cache (``core.device_stats.DeviceStatsCache``) consumes
+    these to bring staged planes up to the table's current version by
+    staging only the changed partitions (appends write ``[C, ΔP]``
+    columns, drops scatter no-op sentinels) instead of restaging the
+    whole ``[C, P]`` plane.  A ``rewrite`` is the one kind that always
+    forces a full restage (arbitrary in-place row changes).
+    """
+
+    version: int                       # table version AFTER this step
+    kind: str                          # 'append' | 'drop' | 'rewrite' | 'update'
+    part_lo: int = 0                   # append: [part_lo, part_hi) new ids
+    part_hi: int = 0
+    part_ids: Tuple[int, ...] = ()     # drop / rewrite targets
+    column: str = ""                   # update: the rewritten column
+
+
 @dataclasses.dataclass
 class PartitionStats:
     """Packed per-partition metadata arrays; the pruning engine's input.
@@ -77,7 +97,9 @@ class PartitionStats:
     A fully-null column within a partition is encoded with min=+inf,
     max=-inf (an empty interval), which makes every range test evaluate
     to NO_MATCH for that partition — the correct SQL semantics, because
-    a NULL never satisfies a comparison.
+    a NULL never satisfies a comparison.  Dropped partitions reuse the
+    same sentinel (plus null/row counts of 0), so every range test and
+    the LIMIT cutter see them as empty.
     """
 
     columns: List[ColumnMeta]
@@ -133,6 +155,42 @@ class PartitionStats:
             null_counts=self.null_counts[part_ids],
             row_counts=self.row_counts[part_ids],
         )
+
+    # ---- incremental DML (streaming micro-partition ingest) ---------------
+    # These mutate the arrays IN PLACE, preserving ``uid``: the table stays
+    # the same identity and resident device planes sync via the delta log
+    # (``TableDelta``) instead of restaging from scratch.
+
+    def append_rows(self, other: "PartitionStats") -> None:
+        """Append another stats block's partitions (same column schema)."""
+        assert [c.name for c in other.columns] == [c.name for c in self.columns]
+        self.mins = np.concatenate([self.mins, other.mins], axis=0)
+        self.maxs = np.concatenate([self.maxs, other.maxs], axis=0)
+        self.null_counts = np.concatenate(
+            [self.null_counts, other.null_counts], axis=0)
+        self.row_counts = np.concatenate(
+            [self.row_counts, other.row_counts], axis=0)
+
+    def drop_rows(self, part_ids: np.ndarray) -> None:
+        """Mark partitions dropped: empty-interval sentinel, zero counts.
+
+        The sentinel makes every range test NO_MATCH and contributes no
+        rows to LIMIT arithmetic; resident device planes replay the same
+        sentinel without reshaping (no partition renumbering)."""
+        ids = np.asarray(part_ids, dtype=np.int64)
+        self.mins[ids] = np.inf
+        self.maxs[ids] = -np.inf
+        self.null_counts[ids] = 0
+        self.row_counts[ids] = 0
+
+    def rewrite_rows(self, part_ids: np.ndarray,
+                     other: "PartitionStats") -> None:
+        """Replace the stat rows of ``part_ids`` with ``other``'s rows."""
+        ids = np.asarray(part_ids, dtype=np.int64)
+        self.mins[ids] = other.mins
+        self.maxs[ids] = other.maxs
+        self.null_counts[ids] = other.null_counts
+        self.row_counts[ids] = other.row_counts
 
     @staticmethod
     def from_columns(
@@ -207,6 +265,38 @@ class ScanSet:
             self.part_ids[order],
             None if self.match is None else self.match[order],
         )
+
+
+def live_full_scan(table) -> ScanSet:
+    """Every *live* partition of a table, FULL-matching.
+
+    The TruePred result under streaming DML: dropped partitions are
+    tombstoned in place (partition ids never shift), so a full scan is
+    the live mask, not ``range(P)``.  Tables without DML support (no
+    ``live`` mask, or one never materialized) are fully live and get the
+    classic ``ScanSet.full``.
+    """
+    live = getattr(table, "live", None)
+    if live is None:
+        return ScanSet.full(table.num_partitions)
+    ids = np.where(np.asarray(live, dtype=bool))[0].astype(np.int64)
+    return ScanSet(ids, np.full(ids.size, FULL_MATCH, dtype=np.int8))
+
+
+def mask_dead_partitions(tv: np.ndarray, table) -> np.ndarray:
+    """Force NO_MATCH on dropped partitions of a ``[P]`` match vector.
+
+    Metadata sentinels make most predicates NO_MATCH on dropped
+    partitions already, but not all (``NOT (x > 5)`` is FULL on an empty
+    interval under the three-valued lattice), so the filter stage masks
+    explicitly — identically on the host and device paths, keeping them
+    bit-identical.
+    """
+    live = getattr(table, "live", None)
+    if live is None:
+        return tv
+    return np.where(np.asarray(live, dtype=bool), tv,
+                    NO_MATCH).astype(np.int8)
 
 
 def pruning_ratio(before: int, after: int) -> float:

@@ -20,7 +20,7 @@ import numpy as np
 
 from ..core import expr as E
 from ..core.flow import PruningReport, Query
-from ..core.metadata import ScanSet
+from ..core.metadata import ScanSet, live_full_scan
 from ..core.rowval import matches
 from .table import Table
 
@@ -138,7 +138,7 @@ def execute_query(
     scan_sets = (
         report.scan_sets
         if report is not None
-        else {n: ScanSet.full(s.table.num_partitions) for n, s in q.scans.items()}
+        else {n: live_full_scan(s.table) for n, s in q.scans.items()}
     )
     metrics: Dict[str, ScanMetrics] = {}
 

@@ -227,7 +227,8 @@ def prune_ranges_batched_device(
     NO_MATCH or false FULL (core.device_stats precision contract).
     """
     Q = len(range_lists)
-    P = dstats.num_partitions
+    P = dstats.num_partitions          # logical partitions
+    Pc = int(dstats.mins.shape[1])     # staged capacity (>= P; sentinel tail)
     cids, lo, hi, full_safe = pack_ranges(range_lists, dstats)
     Qb = cids.shape[0]
     cids_d = jnp.asarray(cids)
@@ -235,13 +236,13 @@ def prune_ranges_batched_device(
     hi_d = jnp.asarray(hi)
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         slab = max(1024, _REF_SLAB_ELEMS // Qb)
-        if slab >= P:
+        if slab >= Pc:
             tv = np.asarray(_batched_ref_jit(
                 cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote))
         else:
-            tv = np.empty((Qb, P), dtype=np.int32)
-            for s in range(0, P, slab):
-                e = min(s + slab, P)
+            tv = np.empty((Qb, Pc), dtype=np.int32)
+            for s in range(0, Pc, slab):
+                e = min(s + slab, Pc)
                 tv[:, s:e] = np.asarray(_batched_ref_jit(
                     cids_d, lo_d, hi_d,
                     jax.lax.slice_in_dim(dstats.mins, s, e, axis=1),
@@ -251,7 +252,7 @@ def prune_ranges_batched_device(
         tv = np.asarray(minmax_prune_batched(
             cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote,
             interpret=(mode == "interpret") or not _on_tpu()))
-    tv = tv[:Q].astype(np.int8)
+    tv = tv[:Q, :P].astype(np.int8)
     if not full_safe.all():
         tv[~full_safe] = np.minimum(tv[~full_safe], 1)
     return tv
@@ -515,6 +516,12 @@ def topk_init_batched_device(
     """
     mask = np.asarray(mask)
     Q = int(mask.shape[0])
+    # Delta-staged planes carry sentinel capacity slots past the table's
+    # logical P; widen the mask with zeros so shapes line up (the slots
+    # are all -inf and masked out — they contribute nothing either way).
+    Pp = int(plane.shape[0])
+    if mask.shape[1] < Pp:
+        mask = np.pad(mask, ((0, 0), (0, Pp - mask.shape[1])))
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         plane_np = np.asarray(plane)
         heap = np.full((Q, k), -np.inf, dtype=np.float32)

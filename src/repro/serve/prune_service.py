@@ -39,11 +39,19 @@ aggregate and per technique (``counters.technique``), and ``run_batch``
 attaches a snapshot to every report (``PruningReport.counters``) so
 benchmarks can attribute speedups per stage.
 
-DML: route mutations through ``notify_insert / notify_delete /
-notify_update`` — they bump the table's ``TableVersion`` and invalidate
-the staged planes, so the next batch re-stages fresh metadata.  Updates
-are column-scoped: the join-key / block-top-k planes of *other* columns
-stay resident (see ``DeviceStatsCache``).
+DML: mutations made through the Table's own streaming methods
+(``append_partitions`` / ``drop_partitions`` / ``rewrite_partitions`` /
+``update_column``) log ``TableDelta``s, and the resident planes
+*delta-sync* on the next batch — appends stage O(ΔP), drops scatter
+sentinels, nothing is invalidated (``notify_append/drop/rewrite`` keep
+the ``TableVersion`` bookkeeping aligned).  The legacy ``notify_insert /
+notify_delete / notify_update`` path still bumps the version and
+invalidates outright, forcing a full restage — never wrong, just the
+pre-ingest cost.  Updates are column-scoped either way: the join-key /
+enum / block-top-k planes of *other* columns stay resident (see
+``DeviceStatsCache``).  Per-batch staging work and the ``PlaneEpoch``
+each table's launches ran against are attached to every report
+(``counters["staging"]`` / ``counters["planes"]``).
 """
 
 from __future__ import annotations
@@ -54,8 +62,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import expr as E
-from ..core.device_stats import DeviceStatsCache
-from ..core.metadata import FULL_MATCH, NO_MATCH, ScanSet
+from ..core.device_stats import DeviceStatsCache, PlaneEpoch
+from ..core.metadata import (FULL_MATCH, NO_MATCH, ScanSet, live_full_scan,
+                             mask_dead_partitions)
 from ..core.predicate_cache import TableVersion
 from ..core.prune_filter import eval_tv, extract_ranges
 from ..core.prune_join import DEFAULT_ENUM_LIMIT, BuildSummary
@@ -143,10 +152,38 @@ class PruningService:
             tv.version += 1
         self.cache.on_update(table_name, column)
 
+    # -- streaming DML (delta-staged; planes stay resident) ----------------
+    # Use these when the mutation went through the Table's own DML methods
+    # (append_partitions / drop_partitions / rewrite_partitions /
+    # update_column): the table's delta log lets the cache sync resident
+    # planes in place, so unlike notify_insert/delete/update nothing is
+    # invalidated here — only the TableVersion bookkeeping advances.
+
+    def notify_append(self, table_name: str, n_partitions: int) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.insert_partitions(n_partitions)
+
+    def notify_drop(self, table_name: str) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.version += 1
+
+    def notify_rewrite(self, table_name: str) -> None:
+        tv = self.versions.get(table_name)
+        if tv is not None:
+            tv.version += 1
+
+    def plane_epoch(self, table) -> Optional[PlaneEpoch]:
+        """(version, live count, capacity) of the table's resident plane."""
+        return self.cache.plane_epoch(table)
+
     # -- filter stage -------------------------------------------------------
 
     @staticmethod
-    def _scan_set(tv: np.ndarray) -> ScanSet:
+    def _scan_set(tv: np.ndarray, table=None) -> ScanSet:
+        if table is not None:
+            tv = mask_dead_partitions(tv, table)
         keep = tv > NO_MATCH
         return ScanSet(np.where(keep)[0], tv[keep])
 
@@ -183,7 +220,7 @@ class PruningService:
             for name, spec in q.scans.items():
                 self.counters.scans += 1
                 if isinstance(spec.pred, E.TruePred):
-                    results[qi][name] = ScanSet.full(spec.table.num_partitions)
+                    results[qi][name] = live_full_scan(spec.table)
                     continue
                 ranges = extract_ranges(spec.pred, spec.table.stats)
                 if ranges is None:
@@ -197,10 +234,11 @@ class PruningService:
                 [ranges for _, _, ranges in jobs], dstats, self.mode)
             self.counters.bump("filter", launches=1)
             for (qi, name, _), tv in zip(jobs, tv_rows):
-                results[qi][name] = self._scan_set(tv)
+                results[qi][name] = self._scan_set(tv, table)
         for qi, name, spec in fallbacks:
             self.counters.bump("filter", fallbacks=1)
-            results[qi][name] = self._scan_set(eval_tv(spec.pred, spec.table.stats))
+            results[qi][name] = self._scan_set(
+                eval_tv(spec.pred, spec.table.stats), spec.table)
         return results
 
     # -- join stage ---------------------------------------------------------
@@ -355,14 +393,30 @@ class PruningService:
         # device path — a host/adaptive pipeline keeps its own semantics.
         device = not pipeline.adaptive and pipeline.filter_mode == "device"
         before = self.counters.snapshot()
+        before_staging = self.cache.staging_snapshot()
         states = [pipeline.make_state(q) for q in queries]
         for tech in pipeline.techniques:
             tech.run_batch(pipeline, states, service=self if device else None)
         reports = [pipeline.finish(s) for s in states]
         delta = ServiceCounters.delta(before, self.counters.snapshot())
+        after_staging = self.cache.staging_snapshot()
+        staging = {k: after_staging[k] - before_staging[k]
+                   for k in after_staging}
+        # PlaneEpoch per table touched by the batch: what the launches
+        # actually ran against (version, live count, capacity) — the
+        # check that a delta-staged batch served the same table state a
+        # fresh restage would.
+        planes: Dict[str, dict] = {}
+        for q in queries:
+            for spec in q.scans.values():
+                epoch = self.cache.plane_epoch(spec.table)
+                if epoch is not None:
+                    planes[spec.table.name] = dataclasses.asdict(epoch)
         for r in reports:
             # each report owns its copy — mutating one never leaks
             r.counters = {**delta,
                           "technique": {k: dict(v)
-                                        for k, v in delta["technique"].items()}}
+                                        for k, v in delta["technique"].items()},
+                          "staging": dict(staging),
+                          "planes": {k: dict(v) for k, v in planes.items()}}
         return reports

@@ -1,6 +1,7 @@
 """Pytest bootstrap: make the hypothesis fallback shim available before any
 test module runs its ``from hypothesis import ...`` line (helpers.py holds
-the shim so it is importable outside pytest too)."""
+the shim so it is importable outside pytest too), and register the fixed
+CI profile so property runs are reproducible per PR."""
 
 import os
 import sys
@@ -10,3 +11,16 @@ sys.path.insert(0, os.path.dirname(__file__))
 from helpers import install_hypothesis_shim  # noqa: E402
 
 install_hypothesis_shim()
+
+# Fixed-seed CI profile: with the real hypothesis package installed the
+# "ci" profile derandomizes (stable examples per PR, no flaky shrink
+# budget); the shim is already deterministic and ignores profiles, but
+# exposes no-op register/load hooks so this block is package-agnostic.
+from hypothesis import settings as _settings  # noqa: E402
+
+if hasattr(_settings, "register_profile"):
+    _settings.register_profile("ci", max_examples=24, deadline=None,
+                               derandomize=True)
+    profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if profile:
+        _settings.load_profile(profile)

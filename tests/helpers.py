@@ -117,6 +117,12 @@ def _build_hypothesis_shim() -> types.ModuleType:
             return fn
         return deco
 
+    # Profile hooks (no-ops): the shim is deterministic by construction;
+    # conftest registers a fixed "ci" profile through the same API when
+    # the real package is present.
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None
+
     mod = types.ModuleType("hypothesis")
     mod.__doc__ = "fixed-example fallback shim (real hypothesis unavailable)"
     mod.given = given

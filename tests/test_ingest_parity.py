@@ -1,0 +1,407 @@
+"""Incremental ingest: randomized DML parity + delta-staging counters.
+
+The tentpole guarantee of the delta-staged device planes: after ANY
+sequence of streaming DML (append / drop / rewrite / update) interleaved
+with queries, the *delta-synced* resident planes produce pruning output
+bit-identical to (a) a fresh full restage of the same table state and
+(b) the f64 host oracle — for every technique (filter, LIMIT, JOIN
+distinct + Bloom, top-k).  The counter tests pin the O(ΔP) staging
+claim: appending ΔP partitions to a resident P-partition table stages
+bytes proportional to ΔP, and only rewrite or capacity overflow pays a
+full restage.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import expr as E
+from repro.core.flow import JoinSpec, PruningPipeline, Query, TableScanSpec
+from repro.core.metadata import live_full_scan
+from repro.core.rowval import matches
+from repro.data.table import Table
+from repro.serve.prune_service import PruningService
+
+NDV_LIMIT = 12     # straddled by build sides: small -> distinct, big -> Bloom
+STR_DOMAIN = ["Bear", "Duck", "Eagle", "Frog", "Pike", "Wolf"]
+
+
+def _rows(rng, n):
+    return {
+        "k": rng.integers(0, 60, n).astype(np.int64),
+        "v": rng.integers(-200, 1000, n).astype(np.int64),
+        "g": rng.integers(0, 50, n).astype(np.int64),
+        "s": np.array([STR_DOMAIN[i] for i in rng.integers(0, len(STR_DOMAIN), n)]),
+    }
+
+
+def _base_tables(seed):
+    rng = np.random.default_rng(seed)
+    fact = Table.build("f", _rows(rng, 110), rows_per_partition=10,
+                       nulls={"v": rng.random(110) < 0.1})
+    dim = Table.build("d", {
+        "a": rng.integers(0, 100, 40).astype(np.int64),
+        "k": rng.integers(0, 60, 40).astype(np.int64),
+    }, rows_per_partition=8)
+    return fact, dim
+
+
+def _queries(fact, dim, rng):
+    """One query per technique family, literals drawn from ``rng``."""
+    lo = int(rng.integers(-100, 800))
+    a_lo = int(rng.integers(0, 80))
+    qs = [
+        # filter (device fast path)
+        Query(scans={"f": TableScanSpec(
+            fact, (E.col("v") >= lo) & (E.col("v") <= lo + 300))}),
+        # filter with NOT -> host-fallback shape (and the empty-interval
+        # NOT pitfall on dropped partitions)
+        Query(scans={"f": TableScanSpec(
+            fact, E.Not(E.col("v") > lo) | (E.col("g") == 7))}),
+        # TruePred (live-mask full scan)
+        Query(scans={"f": TableScanSpec(fact)}),
+        # plain LIMIT
+        Query(scans={"f": TableScanSpec(fact, E.col("v") >= lo)},
+              limit=int(rng.integers(1, 12))),
+        # top-k
+        Query(scans={"f": TableScanSpec(fact, E.col("v") >= -150)},
+              limit=int(rng.integers(1, 8)),
+              order_by=("f", "v", bool(rng.integers(0, 2)))),
+        # join, small build (distinct summary)
+        Query(scans={"f": TableScanSpec(fact),
+                     "d": TableScanSpec(dim, (E.col("a") >= a_lo)
+                                        & (E.col("a") <= a_lo + 10))},
+              join=JoinSpec("d", "f", "k", "k")),
+        # join, big build (Bloom summary at NDV_LIMIT)
+        Query(scans={"f": TableScanSpec(fact, E.col("v") >= lo - 200),
+                     "d": TableScanSpec(dim)},
+              join=JoinSpec("d", "f", "k", "k")),
+    ]
+    return qs
+
+
+def _apply_dml(fact, op, rng):
+    kind = op[0]
+    if kind == "append":
+        n, parts = op[1], op[2]
+        fact.append_partitions(
+            _rows(rng, n), nulls={"v": rng.random(n) < 0.1},
+            rows_per_partition=None if parts == 1 else max(1, n // parts))
+    elif kind == "drop":
+        live = np.where(fact.live_mask)[0]
+        if live.size > 2:
+            fact.drop_partitions(rng.choice(live, size=min(2, live.size - 2),
+                                            replace=False))
+    elif kind == "rewrite":
+        live = np.where(fact.live_mask)[0]
+        pid = int(live[rng.integers(0, live.size)])
+        n = int(np.diff(fact.part_bounds)[pid])
+        fact.rewrite_partitions([pid], _rows(rng, n),
+                                nulls={"v": rng.random(n) < 0.1})
+    elif kind == "update":
+        col = op[1]
+        fact.update_column(col, rng.integers(-300, 1100,
+                                             fact.num_rows).astype(np.int64))
+
+
+def _assert_reports_equal(qs, got, want, label):
+    for qi, (a, b) in enumerate(zip(got, want)):
+        for name in qs[qi].scans:
+            np.testing.assert_array_equal(
+                a.scan_sets[name].part_ids, b.scan_sets[name].part_ids,
+                err_msg=f"{label}: q={qi} scan={name} part_ids")
+            np.testing.assert_array_equal(
+                a.scan_sets[name].match, b.scan_sets[name].match,
+                err_msg=f"{label}: q={qi} scan={name} match")
+        if (a.topk is None) != (b.topk is None):
+            raise AssertionError(f"{label}: q={qi} topk presence differs")
+        if a.topk is not None:
+            np.testing.assert_array_equal(a.topk.values, b.topk.values,
+                                          err_msg=f"{label}: q={qi} topk")
+            np.testing.assert_array_equal(a.topk.skipped, b.topk.skipped,
+                                          err_msg=f"{label}: q={qi} skipped")
+
+
+def _topk_brute(fact, q):
+    """Ground-truth top-k multiset over the table's LIVE rows."""
+    scan_name, col, desc = q.order_by
+    spec = q.scans[scan_name]
+    ctx = fact.ctx_for(np.where(fact.live_mask)[0])
+    mask = matches(spec.pred, ctx)
+    vals, nm = ctx.col(col)
+    vals = np.sort(vals[mask & ~nm])
+    k = q.effective_k
+    return vals[::-1][:k] if desc else vals[:k]
+
+
+@st.composite
+def dml_programs(draw):
+    seed = draw(st.integers(0, 2 ** 31))
+    ops = draw(st.lists(st.one_of(
+        st.integers(5, 35).map(lambda n: ("append", n, 1)),
+        st.integers(8, 30).map(lambda n: ("append", n, 3)),
+        st.integers(0, 3).map(lambda _: ("drop",)),
+        st.integers(0, 3).map(lambda _: ("rewrite",)),
+        st.sampled_from(["v", "g"]).map(lambda c: ("update", c)),
+    ), min_size=1, max_size=5))
+    return seed, ops
+
+
+class TestRandomizedDMLParity:
+    """delta-staged device == fresh-restage device == host oracle."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(program=dml_programs())
+    def test_dml_interleaved_queries(self, program):
+        seed, ops = program
+        rng = np.random.default_rng(seed)
+        fact, dim = _base_tables(seed)
+
+        svc = PruningService(mode="ref")
+        delta_pipe = PruningPipeline(filter_mode="device", service=svc,
+                                     join_ndv_limit=NDV_LIMIT)
+        host_pipe = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+
+        for step, op in enumerate([("noop",)] + list(ops)):
+            if op[0] != "noop":
+                _apply_dml(fact, op, rng)
+            qs = _queries(fact, dim, rng)
+            delta_reports = svc.run_batch(qs, delta_pipe)
+            fresh_svc = PruningService(mode="ref")
+            fresh_pipe = PruningPipeline(filter_mode="device",
+                                         service=fresh_svc,
+                                         join_ndv_limit=NDV_LIMIT)
+            fresh_reports = fresh_svc.run_batch(qs, fresh_pipe)
+            host_reports = [host_pipe.run(q) for q in qs]
+            _assert_reports_equal(qs, delta_reports, fresh_reports,
+                                  f"step {step} ({op[0]}) delta-vs-fresh")
+            _assert_reports_equal(qs, delta_reports, host_reports,
+                                  f"step {step} ({op[0]}) delta-vs-host")
+            for q, rep in zip(qs, delta_reports):
+                if rep.topk is not None:
+                    np.testing.assert_array_equal(
+                        rep.topk.values, _topk_brute(fact, q),
+                        err_msg=f"step {step}: topk vs live-row brute force")
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31))
+    def test_dropped_partitions_never_scanned(self, seed):
+        rng = np.random.default_rng(seed)
+        fact, dim = _base_tables(seed)
+        drop = rng.choice(fact.num_partitions,
+                          size=fact.num_partitions // 3, replace=False)
+        fact.drop_partitions(drop)
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc,
+                               join_ndv_limit=NDV_LIMIT)
+        qs = _queries(fact, dim, rng)
+        for rep, q in zip(svc.run_batch(qs, pipe), qs):
+            for name, ss in rep.scan_sets.items():
+                table = q.scans[name].table
+                assert table.live_mask[ss.part_ids].all(), \
+                    f"dropped partition entered scan set {name}"
+            if rep.topk is not None:
+                assert fact.live_mask[rep.topk.scanned].all()
+
+
+class TestDeltaStagingCounters:
+    """The acceptance criterion: staging work proportional to the delta."""
+
+    def _resident(self, n=240, seed=0, rows_per_partition=10):
+        rng = np.random.default_rng(seed)
+        fact = Table.build("f", _rows(rng, n),
+                           rows_per_partition=rows_per_partition)
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc)
+        qs = [Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)}),
+              Query(scans={"f": TableScanSpec(fact, E.col("g") <= 25)},
+                    limit=5, order_by=("f", "v", True))]
+        svc.run_batch(qs, pipe)       # stage [C, cap] + block-top-k planes
+        return fact, svc, pipe, qs, rng
+
+    def test_append_stages_o_delta_bytes(self):
+        fact, svc, pipe, qs, rng = self._resident()
+        C = len(fact.columns)
+        P = fact.num_partitions
+        before = svc.cache.staging_snapshot()
+        new = fact.append_partitions(_rows(rng, 30), rows_per_partition=10)
+        reports = svc.run_batch(qs, pipe)
+        staging = reports[0].counters["staging"]
+        d_p = len(new)
+        assert staging["full_restages"] == 0
+        assert staging["delta_stages"] >= 1
+        # [C, ΔP] f32 stat planes + the [ΔP, KPLANE] top-k rows — and
+        # nothing anywhere near the full [C, P] restage size.
+        full_bytes = 3 * C * 4 * P
+        assert 0 < staging["staged_bytes"] <= 3 * C * 4 * d_p + 64 * 4 * d_p
+        assert staging["staged_bytes"] < full_bytes
+        assert svc.cache.staging_snapshot()["full_restages"] == \
+            before["full_restages"]
+        # plane epoch advanced to the table's DML version
+        planes = reports[0].counters["planes"]["f"]
+        assert planes["version"] == fact.version
+        assert planes["live"] == fact.num_live_partitions
+
+    def test_many_appends_until_capacity_overflow(self):
+        fact, svc, pipe, qs, rng = self._resident()
+        cap = svc.cache.plane_epoch(fact).capacity
+        fulls = 0
+        while fact.num_partitions <= cap:
+            fact.append_partitions(_rows(rng, 20), rows_per_partition=10)
+            staging = svc.run_batch(qs, pipe)[0].counters["staging"]
+            fulls += staging["full_restages"]
+            if fact.num_partitions <= cap:
+                assert staging["full_restages"] == 0   # in-capacity: delta
+        # the overflowing append (and only it) paid a full restage, and
+        # the new plane has fresh headroom
+        assert fulls >= 1
+        assert svc.cache.plane_epoch(fact).capacity > cap
+
+    def test_drop_scatters_sentinels_without_restage(self):
+        fact, svc, pipe, qs, rng = self._resident()
+        fact.drop_partitions([1, 5, 9])
+        staging = svc.run_batch(qs, pipe)[0].counters["staging"]
+        assert staging["full_restages"] == 0
+        assert staging["delta_stages"] >= 1
+        C = len(fact.columns)
+        assert staging["staged_bytes"] <= (3 * C * 4 + 64 * 4) * 3
+
+    def test_rewrite_forces_full_restage(self):
+        fact, svc, pipe, qs, rng = self._resident()
+        n = int(np.diff(fact.part_bounds)[3])
+        fact.rewrite_partitions([3], _rows(rng, n))
+        staging = svc.run_batch(qs, pipe)[0].counters["staging"]
+        assert staging["full_restages"] >= 1
+
+    def test_update_restages_only_the_column_rows(self):
+        """Satellite fix: an update to a column with NO resident join-key
+        / enum / top-k plane must not bump the whole-table plane epoch —
+        the [C, cap] planes delta-restage that column's rows only, and
+        every other column's resident planes stay put untouched."""
+        rng = np.random.default_rng(3)
+        fact = Table.build("f", _rows(rng, 240), rows_per_partition=10)
+        dim = Table.build("d", {
+            "a": rng.integers(0, 100, 40).astype(np.int64),
+            "k": rng.integers(0, 60, 40).astype(np.int64),
+        }, rows_per_partition=8)
+        svc = PruningService(mode="ref")
+        pipe = PruningPipeline(filter_mode="device", service=svc,
+                               join_ndv_limit=4)
+        qs = [
+            Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)},
+                  limit=5, order_by=("f", "v", True)),
+            Query(scans={"f": TableScanSpec(fact),
+                         "d": TableScanSpec(dim, E.col("a") <= 90)},
+                  join=JoinSpec("d", "f", "k", "k")),   # Bloom at limit 4
+        ]
+        svc.run_batch(qs, pipe)
+        assert svc.cache.key_planes or svc.cache.enum_planes
+        assert svc.cache.topk_planes
+        plane_misses = svc.cache.plane_misses
+        entry = svc.cache.entries[("f", fact.stats.uid)]
+
+        fact.update_column("g", rng.integers(0, 9,
+                                             fact.num_rows).astype(np.int64))
+        reports = svc.run_batch(qs, pipe)
+        staging = reports[0].counters["staging"]
+        # column-granular: 3 rows x [P] f32, never a whole-plane restage
+        assert staging["full_restages"] == 0
+        assert staging["staged_bytes"] == 3 * fact.num_partitions * 4
+        # no per-column plane was restaged (none covers column "g")
+        assert svc.cache.plane_misses == plane_misses
+        # same resident entry object, epoch advanced in place
+        assert svc.cache.entries[("f", fact.stats.uid)] is entry
+        assert entry.version == fact.version
+
+        # ...while an update to a PLANE-backed column restages that
+        # column's planes (and only that column's)
+        key_col_planes = len([k for k in svc.cache.topk_planes
+                              if k[2] == "v"])
+        assert key_col_planes >= 1
+        # all-positive values keep partitions fully matching v >= 0, so
+        # the top-k boundary init consults (and must restage) the plane
+        fact.update_column("v", rng.integers(100, 900,
+                                             fact.num_rows).astype(np.int64))
+        svc.run_batch(qs, pipe)
+        assert svc.cache.plane_misses > plane_misses
+        host = [PruningPipeline(join_ndv_limit=4).run(q) for q in qs]
+        delta = svc.run_batch(qs, pipe)
+        _assert_reports_equal(qs, delta, host, "post-update delta-vs-host")
+
+    def test_legacy_notify_without_table_dml_still_restages(self):
+        """A TableVersion bump with no covering delta log must fall back
+        to the classic full restage (never serve a stale plane)."""
+        fact, svc, pipe, qs, rng = self._resident()
+        svc.register(fact)
+        svc.run_batch(qs, pipe)
+        misses = svc.cache.misses
+        svc.notify_insert("f", 0)       # legacy invalidation path
+        svc.run_batch(qs, pipe)
+        assert svc.cache.misses == misses + 1
+
+
+class TestTableDML:
+    """The Table-level DML contract the planes rely on."""
+
+    def test_append_extends_stats_and_live(self):
+        rng = np.random.default_rng(0)
+        t = Table.build("t", _rows(rng, 40), rows_per_partition=10)
+        uid = t.stats.uid
+        new = t.append_partitions(_rows(rng, 25), rows_per_partition=10)
+        assert list(new) == [4, 5, 6]
+        assert t.num_partitions == 7
+        assert t.stats.num_partitions == 7
+        assert t.stats.uid == uid                  # same identity: no rebuild
+        assert t.num_rows == 65
+        assert t.live_mask.all()
+        assert t.version == 1 and t.deltas[-1].kind == "append"
+
+    def test_drop_is_sentinel_tombstone(self):
+        rng = np.random.default_rng(1)
+        t = Table.build("t", _rows(rng, 40), rows_per_partition=10)
+        t.drop_partitions([1, 3])
+        assert not t.live_mask[1] and not t.live_mask[3]
+        assert np.isinf(t.stats.mins[1]).all() and (t.stats.mins[1] > 0).all()
+        assert t.stats.row_counts[1] == 0
+        assert len(live_full_scan(t)) == 2
+        with pytest.raises(ValueError):
+            t.drop_partitions([1])                  # double drop
+        with pytest.raises(ValueError):
+            n = int(np.diff(t.part_bounds)[1])
+            t.rewrite_partitions([1], _rows(np.random.default_rng(2), n))
+
+    def test_rewrite_rejects_out_of_range_ids(self):
+        """Negative/overflow ids must fail BEFORE any data mutation —
+        a partial rewrite would leave stats stale under the new data."""
+        rng = np.random.default_rng(4)
+        t = Table.build("t", _rows(rng, 40), rows_per_partition=10)
+        stats_before = t.stats.mins.copy()
+        data_before = t.data["v"].copy()
+        n = int(np.diff(t.part_bounds)[0])
+        for bad in ([0, -1], [0, 99]):
+            with pytest.raises(IndexError):
+                t.rewrite_partitions(bad, _rows(rng, 2 * n))
+        np.testing.assert_array_equal(t.stats.mins, stats_before)
+        np.testing.assert_array_equal(t.data["v"], data_before)
+        with pytest.raises(IndexError):
+            t.drop_partitions([-1])
+
+    def test_rewrite_keeps_bounds_and_updates_stats(self):
+        rng = np.random.default_rng(2)
+        t = Table.build("t", _rows(rng, 40), rows_per_partition=10)
+        bounds = t.part_bounds.copy()
+        vals = _rows(rng, 10)
+        vals["v"] = np.full(10, 777, dtype=np.int64)
+        t.rewrite_partitions([2], vals)
+        np.testing.assert_array_equal(t.part_bounds, bounds)
+        ci = t.stats.col_id("v")
+        assert t.stats.mins[2, ci] == 777 == t.stats.maxs[2, ci]
+
+    def test_append_unseen_string_rejected(self):
+        rng = np.random.default_rng(3)
+        t = Table.build("t", _rows(rng, 20), rows_per_partition=10)
+        bad = _rows(rng, 5)
+        bad["s"] = np.array(["NotInDictionary"] * 5)
+        with pytest.raises(KeyError):
+            t.append_partitions(bad)

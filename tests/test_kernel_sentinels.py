@@ -1,0 +1,169 @@
+"""Dropped-partition sentinels through all four batched kernels.
+
+Delta-staged planes tombstone dropped partitions in place — stat rows
+``(+f32max, -f32max, demote=1)``, join-key rows the same empty interval,
+enumeration width 0, block-top-k rows all -inf — and capacity padding
+reuses the identical sentinels.  These tests prove, on the interpret-mode
+Pallas kernels AND the jnp/host refs, that sentinel rows are
+never-prunable-wrong:
+
+  * live partitions' results are bit-identical with and without sentinel
+    rows present (no false NO_MATCH, no lost hits),
+  * sentinel partitions themselves come out as skips (NO_MATCH / no
+    overlap hit) where skipping is correct, and as keeps (Bloom width-0)
+    where only keeping is safe,
+  * sentinel block-top-k rows contribute nothing to a Sec. 5.4 boundary
+    even when a (buggy) mask selects them.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.device_stats import _F32_MAX, DeviceStats
+from repro.core.metadata import ColumnMeta, PartitionStats
+from repro.core.prune_join import BlockedBloom
+from repro.kernels import ops
+
+MODES = ("ref", "interpret")
+
+SENT = np.array([0, 3, 7, 11])          # sentinel (dropped) positions
+LIVE = np.array([i for i in range(12) if i not in SENT])
+
+
+def _stats(mins, maxs, C=2):
+    P = len(mins)
+    return PartitionStats(
+        columns=[ColumnMeta(f"c{i}", "int") for i in range(C)],
+        mins=np.tile(np.asarray(mins, np.float64)[:, None], (1, C)),
+        maxs=np.tile(np.asarray(maxs, np.float64)[:, None], (1, C)),
+        null_counts=np.zeros((P, C), dtype=np.int64),
+        row_counts=np.full(P, 5, dtype=np.int64),
+    )
+
+
+class TestMinmaxSentinels:
+    def test_sentinel_rows_are_no_match_and_live_rows_unchanged(self):
+        rng = np.random.default_rng(0)
+        base_min = rng.integers(-100, 100, LIVE.size).astype(np.float64)
+        base_max = base_min + rng.integers(0, 50, LIVE.size)
+        mins = np.full(12, np.inf)
+        maxs = np.full(12, -np.inf)      # the drop sentinel, pre-cast
+        mins[LIVE], maxs[LIVE] = base_min, base_max
+        d_all = DeviceStats.stage(_stats(mins, maxs))
+        d_live = DeviceStats.stage(_stats(base_min, base_max))
+        range_lists = [
+            [(0, -50.0, 75.0)],                      # two-sided
+            [(1, 0.0, np.inf)],                      # one-sided lo
+            [(0, -np.inf, 10.0)],                    # one-sided hi
+            [(0, 42.0, 42.0), (1, -80.0, 120.0)],    # equality + conj
+        ]
+        for mode in MODES:
+            tv = ops.prune_ranges_batched_device(range_lists, d_all,
+                                                 mode=mode)
+            tv_live = ops.prune_ranges_batched_device(range_lists, d_live,
+                                                      mode=mode)
+            assert (tv[:, SENT] == 0).all(), mode     # sentinel: NO_MATCH
+            np.testing.assert_array_equal(tv[:, LIVE], tv_live,
+                                          err_msg=mode)
+
+    def test_capacity_tail_sentinels_sliced_off(self):
+        """Capacity-padded staging: the logical slice equals dense."""
+        rng = np.random.default_rng(1)
+        mins = rng.integers(-100, 100, 10).astype(np.float64)
+        maxs = mins + 10
+        stats = _stats(mins, maxs)
+        padded = DeviceStats.stage(stats, capacity=32)
+        dense = DeviceStats.stage(stats)
+        assert padded.capacity == 32 and padded.num_partitions == 10
+        ranges = [[(0, -200.0, 200.0)], [(1, 0.0, 5.0)]]
+        for mode in MODES:
+            np.testing.assert_array_equal(
+                ops.prune_ranges_batched_device(ranges, padded, mode=mode),
+                ops.prune_ranges_batched_device(ranges, dense, mode=mode))
+
+
+class TestJoinOverlapSentinels:
+    def test_empty_interval_never_hits_even_extreme_keys(self):
+        rng = np.random.default_rng(2)
+        lmin = rng.integers(-1000, 1000, LIVE.size).astype(np.float32)
+        lmax = lmin + rng.integers(0, 100, LIVE.size).astype(np.float32)
+        pmin = np.full(12, _F32_MAX, dtype=np.float32)
+        pmax = np.full(12, -_F32_MAX, dtype=np.float32)
+        pmin[LIVE], pmax[LIVE] = lmin, lmax
+        distinct = [
+            np.sort(rng.integers(-1200, 1200, 9)).astype(np.float32),
+            np.array([-_F32_MAX, 0.0, _F32_MAX], dtype=np.float32),
+            np.array([_F32_MAX], dtype=np.float32),   # == sentinel pmin
+        ]
+        for mode in MODES:
+            hit = ops.join_overlap_batched_device(
+                distinct, jnp.asarray(pmin), jnp.asarray(pmax), mode=mode)
+            base = ops.join_overlap_batched_device(
+                distinct, jnp.asarray(lmin), jnp.asarray(lmax), mode=mode)
+            assert (hit[:, SENT] == 0).all(), mode
+            np.testing.assert_array_equal(hit[:, LIVE], base[:, :],
+                                          err_msg=mode)
+
+
+class TestTopKInitSentinels:
+    def test_masked_in_sentinel_rows_contribute_nothing(self):
+        rng = np.random.default_rng(3)
+        K, k = 8, 4
+        live_rows = np.sort(
+            rng.uniform(-100, 100, (LIVE.size, K)).astype(np.float32),
+            axis=1)[:, ::-1]
+        plane = np.full((12, K), -np.inf, dtype=np.float32)
+        plane[LIVE] = live_rows
+        # worst case: the mask wrongly selects every sentinel row too
+        mask = np.zeros((3, 12), dtype=np.float32)
+        mask[0, :] = 1.0
+        mask[1, LIVE[:3]] = 1.0
+        mask[1, SENT] = 1.0
+        mask[2, SENT] = 1.0                    # only sentinels: empty heap
+        base_mask = np.zeros((3, LIVE.size), dtype=np.float32)
+        base_mask[0, :] = 1.0
+        base_mask[1, :3] = 1.0
+        for mode in MODES:
+            heap = ops.topk_init_batched_device(
+                jnp.asarray(plane), mask, k, mode=mode)
+            base = ops.topk_init_batched_device(
+                jnp.asarray(live_rows), base_mask, k, mode=mode)
+            np.testing.assert_array_equal(heap[:2], base[:2], err_msg=mode)
+            assert (heap[2] == -np.inf).all(), mode
+
+
+class TestBloomProbeSentinels:
+    def test_width_zero_sentinel_keeps_and_live_unchanged(self):
+        rng = np.random.default_rng(4)
+        lmin = rng.integers(0, 500, LIVE.size).astype(np.int32)
+        lwidth = rng.integers(1, 12, LIVE.size).astype(np.int32)
+        pmin = np.zeros(12, dtype=np.int32)
+        width = np.zeros(12, dtype=np.int32)   # width 0 = sentinel = keep
+        pmin[LIVE], width[LIVE] = lmin, lwidth
+        blooms = []
+        for _ in range(3):
+            b = BlockedBloom(64)
+            b.add(rng.integers(0, 500, 40))
+            blooms.append(b)
+        wmax = int(lwidth.max())
+        for mode in MODES:
+            hit = ops.bloom_probe_batched_device(
+                blooms, jnp.asarray(pmin), jnp.asarray(width), wmax, 1024,
+                mode=mode)
+            base = ops.bloom_probe_batched_device(
+                blooms, jnp.asarray(lmin), jnp.asarray(lwidth), wmax, 1024,
+                mode=mode)
+            assert (hit[:, SENT] == 1).all(), mode    # keep: never a false prune
+            np.testing.assert_array_equal(hit[:, LIVE], base, err_msg=mode)
+
+    def test_modes_agree(self):
+        rng = np.random.default_rng(5)
+        pmin = rng.integers(0, 300, 12).astype(np.int32)
+        width = rng.integers(0, 9, 12).astype(np.int32)
+        b = BlockedBloom(32)
+        b.add(rng.integers(0, 300, 20))
+        got = [np.asarray(ops.bloom_probe_batched_device(
+            [b], jnp.asarray(pmin), jnp.asarray(width),
+            int(width.max()), 1024, mode=m)) for m in MODES]
+        np.testing.assert_array_equal(got[0], got[1])
