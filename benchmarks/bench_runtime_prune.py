@@ -255,6 +255,118 @@ def run_ingest_cell(P: int, rounds: int = INGEST_ROUNDS,
     )
 
 
+FLEET_TABLES = 64
+FLEET_ROUNDS = 6
+FLEET_Q = 64
+FLEET_BUDGET_FRAC = 0.25
+
+
+def _fleet_tables(n_tables: int, rng) -> list:
+    return [Table.build(f"fleet_{i:03d}", {
+        "ts": np.sort(rng.integers(0, 100_000, 240)).astype(np.int64),
+        "user_id": rng.integers(0, 5_000, 240).astype(np.int64),
+        "num_sightings": rng.integers(0, 1_000, 240).astype(np.int64),
+    }, rows_per_partition=10) for i in range(n_tables)]
+
+
+def _fleet_batches(tables, rng, rounds: int, q: int) -> list:
+    """Skewed-popularity rounds; popularity flips mid-run (churn)."""
+    w = 1.0 / np.arange(1, len(tables) + 1) ** 2.0
+    pop = w / w.sum()
+    batches = []
+    for rnd in range(rounds):
+        if rnd == rounds // 2:
+            pop = pop[::-1].copy()
+        qs = []
+        for _ in range(q):
+            t = tables[int(rng.choice(len(tables), p=pop))]
+            lo = int(rng.integers(0, 90_000))
+            if rng.random() < 0.25:
+                qs.append(Query(
+                    scans={t.name: TableScanSpec(t, E.col("ts") >= lo)},
+                    limit=5, order_by=(t.name, "num_sightings", True)))
+            else:
+                qs.append(Query(scans={t.name: TableScanSpec(
+                    t, (E.col("ts") >= lo) & (E.col("ts") <= lo + 8_000))}))
+        batches.append(qs)
+    return batches
+
+
+def run_fleet_cell(n_tables: int = FLEET_TABLES, rounds: int = FLEET_ROUNDS,
+                   q: int = FLEET_Q,
+                   budget_frac: float = FLEET_BUDGET_FRAC) -> dict:
+    """Fleet churn (ISSUE 5): many tables under a tight HBM budget.
+
+    The unbounded engine stages every table's planes once and keeps them
+    all; the budgeted engine serves the same skewed workload from
+    ``budget_frac`` of that working set, evicting and re-staging as
+    popularity shifts.  The cell reports the qps cost of the churn, the
+    eviction counters, and whether output stayed bit-identical — the
+    fleet claim is only real if a bounded plane store serves unbounded
+    tables correctly.
+    """
+    rng = np.random.default_rng(17)
+    tables = _fleet_tables(n_tables, rng)
+    batches = _fleet_batches(tables, rng, rounds, q)
+
+    # Each regime runs the workload twice and the SECOND pass is timed:
+    # pass 1 absorbs jit compiles and first-touch staging, so the
+    # unbounded number is pure query cost (everything resident) and the
+    # budgeted number is query cost + the steady-state eviction/restage
+    # churn a 25% budget keeps paying — their ratio is the churn cost.
+    unbounded = PruningService(mode="ref")
+    pipe_u = PruningPipeline(filter_mode="device", service=unbounded)
+    unbounded.run_fleet(batches, pipe_u)
+    working_set = unbounded.cache.resident_bytes
+    budget = int(working_set * budget_frac)
+    t0 = time.perf_counter()
+    reps_u = unbounded.run_fleet(batches, pipe_u)
+    s_unbounded = time.perf_counter() - t0
+
+    budgeted = PruningService(mode="ref", budget_bytes=budget)
+    pipe_b = PruningPipeline(filter_mode="device", service=budgeted)
+    budgeted.run_fleet(batches, pipe_b)
+    before = budgeted.cache.memory.snapshot()
+    t0 = time.perf_counter()
+    reps_b = budgeted.run_fleet(batches, pipe_b)
+    s_budgeted = time.perf_counter() - t0
+    mem = budgeted.cache.memory
+    timed = {k: getattr(mem, k) - before[k]
+             for k in ("evictions", "restage_storms", "hits", "misses")}
+
+    def _same(a, b):
+        for n in a.scan_sets:
+            if not (np.array_equal(a.scan_sets[n].part_ids,
+                                   b.scan_sets[n].part_ids)
+                    and np.array_equal(a.scan_sets[n].match,
+                                       b.scan_sets[n].match)):
+                return False
+        if (a.topk is None) != (b.topk is None):
+            return False
+        if a.topk is not None:          # 25% of the workload is top-k
+            return (np.array_equal(a.topk.values, b.topk.values)
+                    and np.array_equal(a.topk.skipped, b.topk.skipped))
+        return True
+
+    identical = all(_same(a, b)
+                    for ru, rb in zip(reps_u, reps_b)
+                    for a, b in zip(ru, rb))
+    n_q = rounds * q
+    return dict(
+        tables=n_tables, rounds=rounds, q_per_round=q,
+        working_set_bytes=working_set, budget_bytes=budget,
+        qps_unbounded=n_q / s_unbounded, qps_budgeted=n_q / s_budgeted,
+        churn_cost=s_budgeted / s_unbounded,
+        bit_identical=bool(identical),
+        evictions=timed["evictions"], restage_storms=timed["restage_storms"],
+        plane_hits=timed["hits"], plane_misses=timed["misses"],
+        peak_bytes=mem.peak_bytes,
+        over_budget_events=mem.over_budget_events,
+        budget_held=bool(mem.peak_bytes <= budget
+                         and mem.over_budget_events == 0),
+    )
+
+
 def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         json_path: str = "BENCH_runtime_prune.json"):
     rng = np.random.default_rng(0)
@@ -332,6 +444,19 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         f"{ingest_cell['bytes_per_round_restage']:.0f}B restaged "
         f"(x{1 / max(ingest_cell['bytes_ratio'], 1e-9):.0f} less)",
     ))
+    # Fleet-churn cell (ISSUE 5): 64 tables under a 25% HBM budget —
+    # eviction/restage economics of the LRU plane manager.
+    fleet_cell = run_fleet_cell()
+    rows.append((
+        f"runtime_prune_fleet_T{fleet_cell['tables']}_"
+        f"b{int(FLEET_BUDGET_FRAC * 100)}pct",
+        1e6 * fleet_cell["rounds"] * fleet_cell["q_per_round"]
+        / fleet_cell["qps_budgeted"],
+        f"qps {fleet_cell['qps_budgeted']:.0f} vs unbounded "
+        f"{fleet_cell['qps_unbounded']:.0f} | {fleet_cell['evictions']} "
+        f"evictions, {fleet_cell['restage_storms']} storms, "
+        f"identical={fleet_cell['bit_identical']}",
+    ))
     if csv:
         emit(rows)
     if json_path:
@@ -344,6 +469,7 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
             grid=cells,
             bloom=bloom_cell,
             ingest=ingest_cell,
+            fleet=fleet_cell,
             acceptance=dict(
                 target="qps_batched >= 5x qps_loop at Q=256, P=100k",
                 speedup=accept[0]["speedup"] if accept else None,
@@ -365,6 +491,12 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
                 ingest_passed=bool(ingest_cell["bytes_ratio"] is not None
                                    and ingest_cell["bytes_ratio"] < 0.10
                                    and ingest_cell["full_restages"] == 0),
+                fleet_target=("64 tables under a 25% budget: output "
+                              "bit-identical to the unbounded engine, "
+                              "evictions > 0, budget never exceeded"),
+                fleet_passed=bool(fleet_cell["bit_identical"]
+                                  and fleet_cell["evictions"] > 0
+                                  and fleet_cell["budget_held"]),
             ),
         )
         with open(json_path, "w") as f:

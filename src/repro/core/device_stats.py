@@ -42,9 +42,11 @@ PARTIAL, costing a scan) and can never *false-positive* NO_MATCH or FULL.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -185,23 +187,53 @@ class DeviceStats:
     dropped partitions inside ``logical_p``) hold the drop sentinel
     ``(+f32max, -f32max, demote=1)`` — an empty interval that every
     batched kernel evaluates as NO_MATCH / no-hit / no contribution.
+
+    The three arrays live in ONE ``planes`` tuple swapped atomically by
+    delta replay (single attribute store under the GIL), so a launch
+    that unpacked the tuple once can never see post-DML mins next to
+    pre-DML maxs — the same discipline ``_PlaneEntry.arrays`` follows.
     """
 
     table_name: str
     version: int           # table DML version the planes reflect
-    mins: jnp.ndarray      # [C, cap] widened (rounded toward -inf)
-    maxs: jnp.ndarray      # [C, cap] widened (rounded toward +inf)
-    demote: jnp.ndarray    # [C, cap] 1.0 where nulls or inexact cast: no FULL
+    # ((mins, maxs, demote), logical_p): the three [C, cap] f32 arrays —
+    # mins widened toward -inf, maxs toward +inf, demote 1.0 where
+    # nulls/inexact cast (no FULL) — bundled with the logical partition
+    # count they reflect.  Launch code must read THIS field once
+    # (``planes, P = dstats.planes_state; mins, maxs, demote = planes``)
+    # rather than the per-array / num_partitions properties, which are
+    # separate reads a concurrent replay could tear across.
+    planes_state: Tuple
     integral: np.ndarray   # [C] bool, host-side: int/dictionary-code column
-    logical_p: int = -1    # partitions staged (-1: dense, infer from arrays)
     live_count: int = -1
     tv_version: Optional[int] = None   # service TableVersion seen at staging
 
     def __post_init__(self):
-        if self.logical_p < 0:
-            self.logical_p = int(self.mins.shape[1])
+        planes, p = self.planes_state
+        if p < 0:          # dense staging: infer logical P from the arrays
+            self.planes_state = (planes, int(planes[0].shape[1]))
         if self.live_count < 0:
             self.live_count = self.logical_p
+
+    @property
+    def planes(self) -> Tuple:
+        return self.planes_state[0]
+
+    @property
+    def logical_p(self) -> int:
+        return self.planes_state[1]
+
+    @property
+    def mins(self) -> jnp.ndarray:
+        return self.planes[0]
+
+    @property
+    def maxs(self) -> jnp.ndarray:
+        return self.planes[1]
+
+    @property
+    def demote(self) -> jnp.ndarray:
+        return self.planes[2]
 
     @property
     def num_columns(self) -> int:
@@ -221,7 +253,7 @@ class DeviceStats:
 
     @property
     def nbytes(self) -> int:
-        return int(self.mins.nbytes + self.maxs.nbytes + self.demote.nbytes)
+        return int(sum(int(a.nbytes) for a in self.planes))
 
     def gather(self, cids: np.ndarray):
         """On-device row gather -> per-constraint [K, cap] planes.
@@ -230,9 +262,10 @@ class DeviceStats:
         resident [C, cap] arrays never leave the device.
         """
         cids = jnp.asarray(np.asarray(cids, dtype=np.int32))
-        return (jnp.take(self.mins, cids, axis=0),
-                jnp.take(self.maxs, cids, axis=0),
-                jnp.take(self.demote, cids, axis=0))
+        mins, maxs, demote = self.planes
+        return (jnp.take(mins, cids, axis=0),
+                jnp.take(maxs, cids, axis=0),
+                jnp.take(demote, cids, axis=0))
 
     @staticmethod
     def stage(stats: PartitionStats, table_name: str = "",
@@ -263,11 +296,9 @@ class DeviceStats:
         return DeviceStats(
             table_name=table_name,
             version=version,
-            mins=jnp.asarray(mins32),
-            maxs=jnp.asarray(maxs32),
-            demote=jnp.asarray(demote),
+            planes_state=((jnp.asarray(mins32), jnp.asarray(maxs32),
+                           jnp.asarray(demote)), P),
             integral=integral,
-            logical_p=P,
             live_count=live_count,
         )
 
@@ -296,6 +327,212 @@ class _PlaneEntry:
     @property
     def nbytes(self) -> int:
         return int(sum(int(a.nbytes) for a in self.arrays))
+
+
+@dataclasses.dataclass
+class _Resident:
+    """A plane the memory manager accounts for: device bytes + pin count."""
+
+    nbytes: int
+    pins: int = 0
+
+
+class PlaneMemoryManager:
+    """HBM accountant for every resident plane family, LRU under a budget.
+
+    The paper's fleet serves *thousands* of tables; planes staged
+    unboundedly run device memory out long before that.  The manager
+    enforces one byte budget across all four plane families (stat,
+    join-key, enum, block-top-k) with per-(table, plane) LRU eviction —
+    the skewed, shifting table popularity of real fleets (cf.
+    Workload-Aware Incremental Reclustering) is exactly the regime LRU
+    serves well — plus in-flight pinning so a batched launch can never
+    have a plane it is about to consume evicted from under it.
+
+    Contract (the eviction invariants the fleet suite pins):
+
+      * entries with ``pins > 0`` are never selected for eviction;
+      * an admit first evicts LRU unpinned entries until the new entry
+        fits, so ``bytes_in_use`` exceeds the budget only when the
+        *pinned* set alone forces it (counted: ``over_budget_events``,
+        ``pin_denied``) — with a sane budget both stay 0;
+      * re-admitting a key that was previously evicted counts a
+        ``restage_storm`` — the thrash signal for budget sizing;
+      * eviction is always *safe*: the owning cache drops the entry (a
+        later miss re-stages from host truth), and in-flight launches
+        keep their device arrays alive via ordinary references.
+
+    ``budget_bytes=None`` disables eviction but keeps the accounting —
+    the unbounded engine reports the same counters, all zeros but
+    ``bytes_in_use``/``hits``/``misses``.
+    """
+
+    MONOTONIC = ("hits", "misses", "evictions", "evicted_bytes",
+                 "restage_storms", "over_budget_events", "pin_denied")
+    GAUGES = ("bytes_in_use", "peak_bytes", "pinned_bytes", "budget_bytes",
+              "resident_planes")
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        self.budget_bytes = budget_bytes
+        # (family, key) -> _Resident, LRU order (oldest first)
+        self._resident: "OrderedDict[Tuple, _Resident]" = OrderedDict()
+        self._evict_cb: Optional[Callable[[str, Tuple], None]] = None
+        self._ever_evicted: set = set()
+        # pins owed by scopes whose entry was released (invalidate) and
+        # possibly re-admitted under the same key: their unpins consume
+        # this debt instead of stripping a NEW scope's pin on the fresh
+        # record (which would let it be evicted mid-launch)
+        self._orphan_pins: dict = {}
+        self.bytes_in_use = 0
+        self.peak_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.evicted_bytes = 0
+        self.restage_storms = 0
+        self.over_budget_events = 0   # admits that left use > budget (pins)
+        self.pin_denied = 0           # evictions blocked: all-pinned tail
+
+    def bind(self, evict_cb: Callable[[str, Tuple], None]) -> None:
+        """Register the owning cache's store-removal callback."""
+        self._evict_cb = evict_cb
+
+    # -- accounting ------------------------------------------------------
+
+    def touch(self, family: str, key: Tuple) -> None:
+        """A getter served this resident plane: LRU refresh + hit."""
+        fk = (family, key)
+        if fk in self._resident:
+            self.hits += 1
+            self._resident.move_to_end(fk)
+
+    def admit(self, family: str, key: Tuple, nbytes: int) -> None:
+        """Account a freshly staged plane, evicting LRU unpinned entries
+        first so the budget holds wherever pins allow it to."""
+        fk = (family, key)
+        old = self._resident.pop(fk, None)
+        if old is not None:
+            self.bytes_in_use -= old.nbytes
+        self.misses += 1
+        if fk in self._ever_evicted:
+            self.restage_storms += 1
+        self._make_room(int(nbytes))
+        self._resident[fk] = _Resident(int(nbytes),
+                                       pins=old.pins if old else 0)
+        self.bytes_in_use += int(nbytes)
+        self.peak_bytes = max(self.peak_bytes, self.bytes_in_use)
+        if self.budget_bytes is not None \
+                and self.bytes_in_use > self.budget_bytes:
+            self.over_budget_events += 1
+
+    def _make_room(self, incoming: int) -> None:
+        if self.budget_bytes is None:
+            return
+        if incoming > self.budget_bytes:
+            # A plane that can never fit: evicting the whole fleet's
+            # residency first would buy nothing — admit over budget
+            # (counted by the caller) and leave everyone else resident.
+            return
+        while self.bytes_in_use + incoming > self.budget_bytes:
+            victim = next((fk for fk, r in self._resident.items()
+                           if r.pins == 0), None)
+            if victim is None:
+                # blocked by pins — or, with nothing resident at all, by
+                # a single plane larger than the budget (that is an
+                # over_budget_event, not pin pressure)
+                if self._resident:
+                    self.pin_denied += 1
+                return
+            self._evict_one(victim)
+
+    def _evict_one(self, fk: Tuple) -> None:
+        r = self._resident.pop(fk)
+        assert r.pins == 0, f"evicting pinned plane {fk}"
+        self.bytes_in_use -= r.nbytes
+        self.evictions += 1
+        self.evicted_bytes += r.nbytes
+        self._ever_evicted.add(fk)
+        if self._evict_cb is not None:
+            self._evict_cb(*fk)
+
+    def release(self, family: str, key: Tuple) -> None:
+        """The cache dropped this entry itself (invalidate / restage)."""
+        fk = (family, key)
+        r = self._resident.pop(fk, None)
+        if r is not None:
+            self.bytes_in_use -= r.nbytes
+            if r.pins:
+                # the pinning scopes still owe their unpins — park them
+                # as debt so they cannot strip a later scope's pin on a
+                # re-admitted record under the same key
+                self._orphan_pins[fk] = self._orphan_pins.get(fk, 0) + r.pins
+
+    def reclaim(self) -> None:
+        """Evict back under budget once pins release (pin-scope exit).
+
+        A launch whose pinned working set forced an over-budget admit
+        leaves ``bytes_in_use > budget`` behind; the owning scope calls
+        this on exit so the overshoot lasts exactly as long as the
+        launch.  Silent when everything left is pinned by other scopes.
+        """
+        if self.budget_bytes is None \
+                or self.bytes_in_use <= self.budget_bytes:
+            return      # common case: every launch exits a scope — O(1)
+        # Planes larger than the whole budget can never legally stay:
+        # drop them first rather than flushing the rest of the fleet
+        # around them (admit leaves them resident only while pinned /
+        # until this runs).
+        for fk, r in list(self._resident.items()):
+            if r.pins == 0 and r.nbytes > self.budget_bytes:
+                self._evict_one(fk)
+        while self.bytes_in_use > self.budget_bytes:
+            victim = next((fk for fk, r in self._resident.items()
+                           if r.pins == 0), None)
+            if victim is None:
+                return
+            self._evict_one(victim)
+
+    # -- pinning ---------------------------------------------------------
+
+    def pin(self, family: str, key: Tuple) -> bool:
+        r = self._resident.get((family, key))
+        if r is None:
+            return False
+        r.pins += 1
+        return True
+
+    def unpin(self, family: str, key: Tuple) -> None:
+        fk = (family, key)
+        debt = self._orphan_pins.get(fk)
+        if debt:                        # our pinned record was released
+            if debt == 1:
+                del self._orphan_pins[fk]
+            else:
+                self._orphan_pins[fk] = debt - 1
+            return
+        r = self._resident.get(fk)
+        if r is not None and r.pins > 0:
+            r.pins -= 1
+
+    @property
+    def pinned_bytes(self) -> int:
+        return sum(r.nbytes for r in self._resident.values() if r.pins)
+
+    @property
+    def resident_planes(self) -> int:
+        return len(self._resident)
+
+    def snapshot(self) -> dict:
+        out = {k: getattr(self, k) for k in self.MONOTONIC}
+        out.update({k: getattr(self, k) for k in self.GAUGES})
+        return out
+
+    @staticmethod
+    def delta(before: dict, after: dict) -> dict:
+        """Monotonic counters differenced, gauges taken from ``after``."""
+        out = {k: after[k] - before[k] for k in PlaneMemoryManager.MONOTONIC}
+        out.update({k: after[k] for k in PlaneMemoryManager.GAUGES})
+        return out
 
 
 class DeviceStatsCache:
@@ -354,9 +591,25 @@ class DeviceStatsCache:
     [C, P] planes (they carry every column) but only the *matching
     column's* join-key / block-top-k planes — an update to column X cannot
     change column Y's values, so Y's planes stay resident.
+
+    Memory budget (PR 5)
+    --------------------
+    ``budget_bytes`` hands residency to a ``PlaneMemoryManager``: one
+    HBM byte budget across all four plane families, per-(table, plane)
+    LRU eviction, and in-flight pinning via ``pin_scope`` so a batched
+    launch can never lose a plane it is consuming.  Eviction is always
+    safe — a later getter simply restages (and, the plane being gone,
+    pays the full-restage cost; the fleet counters make that thrash
+    visible as ``restage_storms``).  Without a budget the legacy
+    ``max_entries`` / ``max_planes`` count caps apply unchanged.  Every
+    getter is atomic under one reentrant lock: the table-version check,
+    the delta replay, the manager accounting, and the returned-plane
+    read cannot interleave with a concurrent DML invalidation (the
+    eviction-path race the fleet suite regression-tests).
     """
 
-    def __init__(self, max_entries: int = 16, max_planes: int = 64):
+    def __init__(self, max_entries: int = 16, max_planes: int = 64,
+                 budget_bytes: Optional[int] = None):
         # (name, uid) -> DeviceStats ([C, cap] planes + epoch)
         self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
         self.max_entries = max_entries
@@ -377,6 +630,77 @@ class DeviceStatsCache:
         self.delta_stages = 0      # successful delta replays (any family)
         self.full_restages = 0     # full restagings of previously-resident
                                    # planes (rewrite / log gap / overflow)
+        # HBM budget across all plane families.  With a budget set, the
+        # byte-LRU memory manager governs residency and the legacy
+        # count caps (max_entries / max_planes) are inactive; without
+        # one the counts cap as before and the manager only accounts.
+        self.memory = PlaneMemoryManager(budget_bytes)
+        self._stores = {"stat": self.entries, "join_key": self.key_planes,
+                        "enum": self.enum_planes,
+                        "block_topk": self.topk_planes}
+        self.memory.bind(self._evict_family)
+        # Epoch check + plane read must be atomic per getter: under the
+        # eviction path a concurrent version bump / invalidate between
+        # the check and the read could hand out a plane whose manager
+        # record is already gone (accounting drift) or mix two versions'
+        # arrays.  One reentrant lock serializes getters, DML hooks, and
+        # manager mutation; pin scopes are tracked per thread.
+        self._lock = threading.RLock()
+        self._pin_local = threading.local()
+
+    # ---- memory-manager plumbing ---------------------------------------
+
+    def _evict_family(self, family: str, key: Tuple) -> None:
+        """Manager-initiated eviction: drop the entry from its store
+        (the manager already removed its own record)."""
+        self._stores[family].pop(key, None)
+
+    def _pin_frames(self):
+        frames = getattr(self._pin_local, "frames", None)
+        if frames is None:
+            frames = self._pin_local.frames = []
+        return frames
+
+    @contextlib.contextmanager
+    def pin_scope(self):
+        """Pin every plane a getter returns inside this scope.
+
+        Batched launches wrap their getter + kernel call in a scope so
+        the planes they are about to consume cannot be evicted mid-
+        launch (and the budget accounting stays honest about in-flight
+        HBM).  Scopes nest; pins are reference counts per entry.
+        """
+        frame: list = []
+        with self._lock:
+            self._pin_frames().append(frame)
+        try:
+            yield
+        finally:
+            with self._lock:
+                frames = self._pin_frames()
+                # remove by identity: nested scopes can hold equal-content
+                # frames, and list.remove's equality match would pop the
+                # wrong one, leaking the outer scope's pins forever
+                for i in range(len(frames) - 1, -1, -1):
+                    if frames[i] is frame:
+                        del frames[i]
+                        break
+                for fk in frame:
+                    self.memory.unpin(*fk)
+                self.memory.reclaim()
+
+    def _scope_pin(self, family: str, key: Tuple) -> None:
+        frames = self._pin_frames()
+        if frames and self.memory.pin(family, key):
+            frames[-1].append((family, key))
+
+    def _touch(self, family: str, key: Tuple) -> None:
+        self.memory.touch(family, key)
+        self._scope_pin(family, key)
+
+    def _admit(self, family: str, key: Tuple, nbytes: int) -> None:
+        self.memory.admit(family, key, nbytes)
+        self._scope_pin(family, key)
 
     # ---- version / delta-log plumbing ----------------------------------
 
@@ -430,7 +754,7 @@ class DeviceStatsCache:
         stats = table.stats
         if stats.num_partitions > e.capacity:
             return False
-        mins, maxs, dem = e.mins, e.maxs, e.demote
+        mins, maxs, dem = e.planes
         nbytes = 0
         for d in deltas:
             if d.kind == "append":
@@ -462,8 +786,10 @@ class DeviceStatsCache:
                 nbytes += 3 * P * 4
             else:                      # rewrite (or unknown): full restage
                 return False
-        e.mins, e.maxs, e.demote = mins, maxs, dem
-        e.logical_p = stats.num_partitions
+        # one atomic tuple store: an in-flight launch that already read
+        # e.planes_state keeps a consistent pre-replay (planes, P) pair,
+        # and a later read sees the full post-replay pair — never a mix
+        e.planes_state = ((mins, maxs, dem), stats.num_partitions)
         e.live_count = self._live_count(table)
         self.staged_bytes += nbytes
         self.delta_stages += 1
@@ -479,45 +805,53 @@ class DeviceStatsCache:
         A service ``TableVersion`` bump without a covering table delta
         log (legacy invalidation flow) also forces a restage.
         """
-        key = (table.name, table.stats.uid)
-        tvv = tv.version if tv is not None else None
-        tver = self._table_version(table)
-        e = self.entries.get(key)
-        if e is not None:
-            if e.version == tver and (tvv is None or e.tv_version in
-                                      (None, tvv)):
-                self.hits += 1
-                if tvv is not None:
-                    e.tv_version = tvv
-                self.entries.move_to_end(key)
-                return e
-            if e.version < tver:
-                deltas = self._deltas_since(table, e.version)
-                if deltas is not None and self._replay_stats(e, table, deltas):
-                    e.version = tver
-                    e.tv_version = tvv
+        with self._lock:
+            key = (table.name, table.stats.uid)
+            tvv = tv.version if tv is not None else None
+            tver = self._table_version(table)
+            e = self.entries.get(key)
+            if e is not None:
+                if e.version == tver and (tvv is None or e.tv_version in
+                                          (None, tvv)):
                     self.hits += 1
+                    if tvv is not None:
+                        e.tv_version = tvv
                     self.entries.move_to_end(key)
+                    self._touch("stat", key)
                     return e
-            # stale and not replayable: rebuild below
-            self.full_restages += 1
-        self.misses += 1
-        e = DeviceStats.stage(
-            table.stats, table.name, tver,
-            capacity=plane_capacity(table.stats.num_partitions),
-            live=getattr(table, "live", None))
-        e.tv_version = tvv
-        self.staged_bytes += e.nbytes
-        self.entries[key] = e
-        self.entries.move_to_end(key)
-        while len(self.entries) > self.max_entries:
-            self.entries.popitem(last=False)
-        return e
+                if e.version < tver:
+                    deltas = self._deltas_since(table, e.version)
+                    if deltas is not None and self._replay_stats(e, table,
+                                                                 deltas):
+                        e.version = tver
+                        e.tv_version = tvv
+                        self.hits += 1
+                        self.entries.move_to_end(key)
+                        self._touch("stat", key)
+                        return e
+                # stale and not replayable: rebuild below
+                self.full_restages += 1
+                self.memory.release("stat", key)
+            self.misses += 1
+            e = DeviceStats.stage(
+                table.stats, table.name, tver,
+                capacity=plane_capacity(table.stats.num_partitions),
+                live=getattr(table, "live", None))
+            e.tv_version = tvv
+            self.staged_bytes += e.nbytes
+            self._admit("stat", key, e.nbytes)
+            self.entries[key] = e
+            self.entries.move_to_end(key)
+            if self.memory.budget_bytes is None:
+                while len(self.entries) > self.max_entries:
+                    k, _ = self.entries.popitem(last=False)
+                    self.memory.release("stat", k)
+            return e
 
     # ---- runtime-technique planes --------------------------------------
 
-    def _plane_current(self, store: "OrderedDict", key: Tuple, table,
-                       column: str, append_fn, drop_fn):
+    def _plane_current(self, family: str, store: "OrderedDict", key: Tuple,
+                       table, column: str, append_fn, drop_fn):
         """Return the resident plane entry brought current, or None.
 
         Replays the table's delta log against the entry: appends stage
@@ -534,6 +868,7 @@ class DeviceStatsCache:
         if e.version == tver:
             self.plane_hits += 1
             store.move_to_end(key)
+            self._touch(family, key)
             return e
         ok = False
         if e.version < tver:
@@ -563,18 +898,23 @@ class DeviceStatsCache:
                         self.delta_stages += 1
                     self.plane_hits += 1
                     store.move_to_end(key)
+                    self._touch(family, key)
                     return e
         del store[key]
+        self.memory.release(family, key)
         self.full_restages += 1
         return None
 
-    def _plane_put(self, store: "OrderedDict", key: Tuple,
+    def _plane_put(self, family: str, store: "OrderedDict", key: Tuple,
                    entry: _PlaneEntry) -> _PlaneEntry:
         self.plane_misses += 1
         self.staged_bytes += entry.nbytes
+        self._admit(family, key, entry.nbytes)
         store[key] = entry
-        while len(store) > self.max_planes:
-            store.popitem(last=False)
+        if self.memory.budget_bytes is None:
+            while len(store) > self.max_planes:
+                k, _ = store.popitem(last=False)
+                self.memory.release(family, k)
         return entry
 
     # -- join-key planes --
@@ -609,20 +949,21 @@ class DeviceStatsCache:
         padding can never produce a hit; dropped/capacity slots hold the
         empty-interval sentinel (+f32max, -f32max) — never a hit either.
         """
-        key = (table.name, table.stats.uid, key_col)
-        e = self._plane_current(self.key_planes, key, table, key_col,
-                                self._key_append, self._key_drop)
-        if e is not None:
-            return e.arrays
-        P = table.stats.num_partitions
-        cap = plane_capacity(P)
-        pmin = np.full(cap, _F32_MAX, dtype=np.float32)
-        pmax = np.full(cap, -_F32_MAX, dtype=np.float32)
-        pmin[:P], pmax[:P] = self._key_rows(table, key_col, 0, P)
-        e = _PlaneEntry(self._table_version(table), P,
-                        (jnp.asarray(pmin), jnp.asarray(pmax)),
-                        meta=dict(col=key_col))
-        return self._plane_put(self.key_planes, key, e).arrays
+        with self._lock:
+            key = (table.name, table.stats.uid, key_col)
+            e = self._plane_current("join_key", self.key_planes, key, table,
+                                    key_col, self._key_append, self._key_drop)
+            if e is not None:
+                return e.arrays
+            P = table.stats.num_partitions
+            cap = plane_capacity(P)
+            pmin = np.full(cap, _F32_MAX, dtype=np.float32)
+            pmax = np.full(cap, -_F32_MAX, dtype=np.float32)
+            pmin[:P], pmax[:P] = self._key_rows(table, key_col, 0, P)
+            e = _PlaneEntry(self._table_version(table), P,
+                            (jnp.asarray(pmin), jnp.asarray(pmax)),
+                            meta=dict(col=key_col))
+            return self._plane_put("join_key", self.key_planes, key, e).arrays
 
     def enum_plane(self, table, key_col: str) -> Tuple:
         """The key column's resident enumeration rows:
@@ -650,23 +991,25 @@ class DeviceStatsCache:
         enumerated, i.e. kept — which its absence from every scan set
         then makes irrelevant).
         """
-        key = (table.name, table.stats.uid, key_col)
-        e = self._plane_current(self.enum_planes, key, table, key_col,
-                                self._enum_append, self._enum_drop)
-        if e is not None:
+        with self._lock:
+            key = (table.name, table.stats.uid, key_col)
+            e = self._plane_current("enum", self.enum_planes, key, table,
+                                    key_col, self._enum_append,
+                                    self._enum_drop)
+            if e is not None:
+                return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
+            P = table.stats.num_partitions
+            cap = plane_capacity(P)
+            pmin_h, width_h, wmax, domain_ok = self._enum_rows(table, key_col)
+            pmin = np.zeros(cap, dtype=np.int32)
+            width = np.zeros(cap, dtype=np.int32)
+            pmin[:P], width[:P] = pmin_h, width_h
+            e = _PlaneEntry(self._table_version(table), P,
+                            (jnp.asarray(pmin), jnp.asarray(width)),
+                            meta=dict(col=key_col, wmax=wmax,
+                                      domain_ok=domain_ok))
+            e = self._plane_put("enum", self.enum_planes, key, e)
             return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
-        P = table.stats.num_partitions
-        cap = plane_capacity(P)
-        pmin_h, width_h, wmax, domain_ok = self._enum_rows(table, key_col)
-        pmin = np.zeros(cap, dtype=np.int32)
-        width = np.zeros(cap, dtype=np.int32)
-        pmin[:P], width[:P] = pmin_h, width_h
-        e = _PlaneEntry(self._table_version(table), P,
-                        (jnp.asarray(pmin), jnp.asarray(width)),
-                        meta=dict(col=key_col, wmax=wmax,
-                                  domain_ok=domain_ok))
-        e = self._plane_put(self.enum_planes, key, e)
-        return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
 
     @staticmethod
     def _enum_rows(table, key_col: str):
@@ -717,20 +1060,24 @@ class DeviceStatsCache:
         true value of an actual non-null row — any boundary taken from
         these rows is a *witnessed* Sec. 5.4 boundary.
         """
-        key = (table.name, table.stats.uid, order_col, bool(desc),
-               int(k_plane))
-        e = self._plane_current(self.topk_planes, key, table, order_col,
-                                self._topk_append, self._topk_drop)
-        if e is not None:
-            return e.arrays[0]
-        P = table.stats.num_partitions
-        cap = plane_capacity(P)
-        rows = np.full((cap, int(k_plane)), -np.inf, dtype=np.float32)
-        rows[:P] = self._topk_rows(table, order_col, bool(desc),
-                                   int(k_plane), 0, P)
-        e = _PlaneEntry(self._table_version(table), P, (jnp.asarray(rows),),
-                        meta=dict(col=order_col, desc=bool(desc)))
-        return self._plane_put(self.topk_planes, key, e).arrays[0]
+        with self._lock:
+            key = (table.name, table.stats.uid, order_col, bool(desc),
+                   int(k_plane))
+            e = self._plane_current("block_topk", self.topk_planes, key,
+                                    table, order_col, self._topk_append,
+                                    self._topk_drop)
+            if e is not None:
+                return e.arrays[0]
+            P = table.stats.num_partitions
+            cap = plane_capacity(P)
+            rows = np.full((cap, int(k_plane)), -np.inf, dtype=np.float32)
+            rows[:P] = self._topk_rows(table, order_col, bool(desc),
+                                       int(k_plane), 0, P)
+            e = _PlaneEntry(self._table_version(table), P,
+                            (jnp.asarray(rows),),
+                            meta=dict(col=order_col, desc=bool(desc)))
+            return self._plane_put("block_topk", self.topk_planes, key,
+                                   e).arrays[0]
 
     @staticmethod
     def _topk_rows(table, order_col: str, desc: bool, k_plane: int,
@@ -780,15 +1127,20 @@ class DeviceStatsCache:
         plus only that column's join-key / enumeration / block-top-k
         planes.
         """
-        stale = [k for k in self.entries if k[0] == table_name]
-        for k in stale:
-            del self.entries[k]
-        for store in (self.key_planes, self.enum_planes, self.topk_planes):
-            stale = [k for k in store
-                     if k[0] == table_name
-                     and (column is None or k[2] == column)]
+        with self._lock:
+            stale = [k for k in self.entries if k[0] == table_name]
             for k in stale:
-                del store[k]
+                del self.entries[k]
+                self.memory.release("stat", k)
+            for family, store in (("join_key", self.key_planes),
+                                  ("enum", self.enum_planes),
+                                  ("block_topk", self.topk_planes)):
+                stale = [k for k in store
+                         if k[0] == table_name
+                         and (column is None or k[2] == column)]
+                for k in stale:
+                    del store[k]
+                    self.memory.release(family, k)
 
     # ---- DML hooks (mirror predicate_cache's safety analysis; staging a
     # stale stats plane is never *unsafe* for NO_MATCH only if stats were
@@ -817,7 +1169,9 @@ class DeviceStatsCache:
         # (the enum store used to be summed with a stale 3-tuple unpack
         # that raised once any enum plane was resident; the generic
         # _PlaneEntry walk fixes that)
-        total = sum(e.nbytes for e in self.entries.values())
-        for store in (self.key_planes, self.enum_planes, self.topk_planes):
-            total += sum(e.nbytes for e in store.values())
-        return total
+        with self._lock:
+            total = sum(e.nbytes for e in self.entries.values())
+            for store in (self.key_planes, self.enum_planes,
+                          self.topk_planes):
+                total += sum(e.nbytes for e in store.values())
+            return total

@@ -525,6 +525,16 @@ class PruningPipeline:
                                      # metadata planes and batched kernels.
         service=None,                # serve.prune_service.PruningService;
                                      # built lazily for filter_mode='device'
+        budget_bytes: Optional[int] = None,
+                                     # HBM budget for the lazily-built
+                                     # service's plane manager: every plane
+                                     # getter routes through it (LRU
+                                     # eviction + in-flight pinning); None
+                                     # keeps the planes unbounded.
+        shard_planes: bool = False,  # partition-shard the lazily-built
+                                     # service's batched launches over the
+                                     # host plane mesh (shard_map on
+                                     # launch.mesh.make_plane_mesh()).
     ):
         self.adaptive = adaptive
         self.topk_strategy = topk_strategy
@@ -535,7 +545,16 @@ class PruningPipeline:
         self.enable_topk = enable_topk
         self.join_ndv_limit = join_ndv_limit
         self.filter_mode = filter_mode
+        if service is not None and (budget_bytes is not None or shard_planes):
+            # Silently dropping these would run the fleet unbounded /
+            # unsharded — the exact failure they exist to prevent.
+            raise ValueError(
+                "budget_bytes / shard_planes configure the lazily-built "
+                "service; pass them to the PruningService itself when "
+                "providing one")
         self._service = service
+        self._budget_bytes = budget_bytes
+        self._shard_planes = shard_planes
         self.techniques: List[Technique] = [
             FilterTechnique(), LimitTechnique(),
             JoinTechnique(), TopKTechnique(),
@@ -545,11 +564,18 @@ class PruningPipeline:
         """The PruningService backing filter_mode='device' (lazy).
 
         Sharing one service across pipelines shares its DeviceStatsCache —
-        tables are staged once per version, not once per pipeline.
+        tables are staged once per version, not once per pipeline.  Every
+        plane getter the techniques reach through this service routes
+        through the cache's ``PlaneMemoryManager`` (LRU under
+        ``budget_bytes``, pinned while a launch is in flight); with
+        ``shard_planes`` the batched launches partition-shard over the
+        host plane mesh.
         """
         if self._service is None:
             from ..serve.prune_service import PruningService
-            self._service = PruningService()
+            self._service = PruningService(
+                budget_bytes=self._budget_bytes,
+                shard_mesh=True if self._shard_planes else None)
         return self._service
 
     # -- shape gates shared by executors -------------------------------------

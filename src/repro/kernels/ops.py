@@ -30,11 +30,19 @@ exactly equal to the f64 host oracle on the paper's workloads.
 
 from __future__ import annotations
 
+import functools
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as PSpec
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:              # pragma: no cover - very old jax
+    shard_map = None
 
 from ..core.device_stats import (DeviceStats, cast_bounds_f32, cast_stats_f32,
                                  snap_bounds_integral)
@@ -55,6 +63,124 @@ _REF_SLAB_ELEMS = 1 << 25
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Partition-dim sharding (fleet-scale planes; launch/mesh.make_plane_mesh)
+# ---------------------------------------------------------------------------
+#
+# Every batched kernel evaluates queries x partitions with no cross-
+# partition coupling except the top-k heap (a pure selection, mergeable by
+# rank).  A 1-D ``parts`` mesh therefore shards the resident planes on the
+# partition (capacity) dim via shard_map: each device runs the identical
+# kernel on its [*, cap/n] shard, verdict rows concatenate, and per-shard
+# top-k heaps reduce with the rank-selection merge.  Capacity padding and
+# dead-partition sentinels are position-independent no-ops, so a sentinel
+# landing on a shard edge behaves exactly as it does mid-plane
+# (tests/test_kernel_sentinels.py pins that for all four kernels).
+
+PLANE_AXIS = "parts"
+
+
+def mesh_shards(mesh, cap: int) -> int:
+    """Usable partition-shard count for a capacity-``cap`` plane.
+
+    The mesh's device count when it has a ``parts`` axis dividing ``cap``
+    (plane capacities and plane-mesh sizes are both powers of two, so
+    this holds for every plane at least as wide as the mesh); otherwise 1
+    — the launch simply stays unsharded, same math, one device.
+    """
+    if mesh is None or shard_map is None:
+        return 1
+    if PLANE_AXIS not in getattr(mesh, "axis_names", ()):
+        return 1
+    n = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    return n if (n > 1 and cap % n == 0) else 1
+
+
+def _use_kernel(mode: str) -> bool:
+    """Kernel vs jnp-oracle body inside a sharded launch — the same
+    mode policy as the unsharded wrappers (``auto`` off-TPU -> oracle)."""
+    return mode != "ref" and (mode != "auto" or _on_tpu())
+
+
+# Shard count the most recent batched launch on THIS thread actually
+# used (1 = unsharded) — the wrappers can demote a mesh-eligible launch
+# back to unsharded when the jnp-oracle body's dense footprint exceeds
+# the slab bound, and the service's sharded_launches counter must report
+# what really ran, not mesh eligibility.  Thread-local so concurrent
+# services (the supported multi-threaded serving regime) cannot
+# cross-attribute each other's launches.
+_shard_note = threading.local()
+
+
+def last_launch_shards() -> int:
+    return getattr(_shard_note, "n", 1)
+
+
+def _note_shards(n: int) -> int:
+    _shard_note.n = int(n)
+    return n
+
+
+# The sharded callables are built once per (mesh, static config) and
+# jit-wrapped, so repeated launches hit the jit cache instead of
+# re-tracing shard_map eagerly per call — a fleet issues thousands of
+# launches over a handful of shape buckets.
+
+@functools.lru_cache(maxsize=None)
+def _sharded_minmax(mesh, use_kernel: bool, interp: bool):
+    def body(c, l, h, m, x, d):
+        if use_kernel:
+            return minmax_prune_batched(c, l, h, m, x, d, interpret=interp)
+        return ref.minmax_prune_batched_ref(c, l, h, m, x, d)
+
+    rep, sp = PSpec(), PSpec(None, PLANE_AXIS)
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(rep, rep, rep, sp, sp, sp),
+                             out_specs=sp, check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_join(mesh, use_kernel: bool, interp: bool):
+    def body(d, a, b):
+        if use_kernel:
+            return join_overlap_batched(d, a, b, interpret=interp)
+        return ref.join_overlap_batched_ref(d, a, b)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(PLANE_AXIS), PSpec(PLANE_AXIS)),
+        out_specs=PSpec(None, PLANE_AXIS), check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_bloom(mesh, use_kernel: bool, interp: bool, enum_pad: int):
+    def body(l, h, pm, w):
+        if use_kernel:
+            return bloom_probe_batched(l, h, pm, w, enum_pad=enum_pad,
+                                       interpret=interp)
+        return ref.bloom_probe_batched_ref(l, h, pm, w, enum_pad)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(), PSpec(), PSpec(PLANE_AXIS), PSpec(PLANE_AXIS)),
+        out_specs=PSpec(None, PLANE_AXIS), check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_topk(mesh, use_kernel: bool, interp: bool, k: int):
+    def body(pl, m):
+        if use_kernel:
+            heap = topk_init_batched(pl, m, k, interpret=interp)
+        else:
+            heap = ref.topk_init_batched_ref(pl, m, k)
+        return heap[None]
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(PLANE_AXIS, None), PSpec(PLANE_AXIS, None)),
+        out_specs=PSpec(PLANE_AXIS, None, None), check_rep=False))
 
 
 def _pow2_at_least(n: int, floor: int = 1) -> int:
@@ -217,6 +343,7 @@ def prune_ranges_batched_device(
     range_lists: Sequence[List[Tuple[int, float, float]]],
     dstats: DeviceStats,
     mode: str = "auto",          # 'auto' | 'pallas' | 'interpret' | 'ref'
+    mesh=None,                   # 1-D 'parts' mesh: shard the partition dim
 ) -> np.ndarray:
     """Evaluate Q queries' conjunctive ranges in one batched launch.
 
@@ -225,32 +352,52 @@ def prune_ranges_batched_device(
     int/dictionary workloads (bounds snap to integers and cast exactly).
     Bounds that are inexact in f32 demote FULL to PARTIAL — never a false
     NO_MATCH or false FULL (core.device_stats precision contract).
+
+    With ``mesh`` (``launch.mesh.make_plane_mesh``) the resident planes
+    shard on the capacity dim: each device evaluates its partition slice
+    and the verdict rows concatenate — bit-identical to the unsharded
+    launch (partitions are independent).
     """
     Q = len(range_lists)
-    P = dstats.num_partitions          # logical partitions
-    Pc = int(dstats.mins.shape[1])     # staged capacity (>= P; sentinel tail)
+    # one consistent snapshot: a concurrent delta replay swaps the whole
+    # (planes, logical P) pair atomically, so a single read here can
+    # never mix post-DML planes with a pre-DML partition count (or
+    # vice versa)
+    planes, P = dstats.planes_state
+    mins, maxs, demote = planes
+    Pc = int(mins.shape[1])            # staged capacity (>= P; sentinel tail)
     cids, lo, hi, full_safe = pack_ranges(range_lists, dstats)
     Qb = cids.shape[0]
     cids_d = jnp.asarray(cids)
     lo_d = jnp.asarray(lo)
     hi_d = jnp.asarray(hi)
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    shards = mesh_shards(mesh, Pc)
+    if (shards > 1 and not _use_kernel(mode)
+            and Qb * Pc // shards > _REF_SLAB_ELEMS):
+        shards = 1     # per-shard jnp body would exceed the slab bound;
+                       # the unsharded path below slabs instead
+    _note_shards(shards)
+    if shards > 1:
+        fn = _sharded_minmax(mesh, _use_kernel(mode),
+                             (mode == "interpret") or not _on_tpu())
+        tv = np.asarray(fn(cids_d, lo_d, hi_d, mins, maxs, demote))
+    elif mode == "ref" or (mode == "auto" and not _on_tpu()):
         slab = max(1024, _REF_SLAB_ELEMS // Qb)
         if slab >= Pc:
             tv = np.asarray(_batched_ref_jit(
-                cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote))
+                cids_d, lo_d, hi_d, mins, maxs, demote))
         else:
             tv = np.empty((Qb, Pc), dtype=np.int32)
             for s in range(0, Pc, slab):
                 e = min(s + slab, Pc)
                 tv[:, s:e] = np.asarray(_batched_ref_jit(
                     cids_d, lo_d, hi_d,
-                    jax.lax.slice_in_dim(dstats.mins, s, e, axis=1),
-                    jax.lax.slice_in_dim(dstats.maxs, s, e, axis=1),
-                    jax.lax.slice_in_dim(dstats.demote, s, e, axis=1)))
+                    jax.lax.slice_in_dim(mins, s, e, axis=1),
+                    jax.lax.slice_in_dim(maxs, s, e, axis=1),
+                    jax.lax.slice_in_dim(demote, s, e, axis=1)))
     else:
         tv = np.asarray(minmax_prune_batched(
-            cids_d, lo_d, hi_d, dstats.mins, dstats.maxs, dstats.demote,
+            cids_d, lo_d, hi_d, mins, maxs, demote,
             interpret=(mode == "interpret") or not _on_tpu()))
     tv = tv[:Q, :P].astype(np.int8)
     if not full_safe.all():
@@ -373,6 +520,7 @@ def join_overlap_batched_device(
     pmax: jnp.ndarray,       # [P] resident f32 key-column maxima (widened)
     mode: str = "auto",
     part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+    mesh=None,
 ) -> np.ndarray:
     """hit [Q, P] int32 — Q build summaries vs the resident key plane.
 
@@ -391,6 +539,17 @@ def join_overlap_batched_device(
     """
     Q = len(distinct_lists)
     P = int(pmin.shape[0])
+    shards = mesh_shards(mesh, P)
+    if (shards > 1 and not _use_kernel(mode)
+            and q_bucket(Q) * P // shards > _REF_SLAB_ELEMS):
+        shards = 1     # keep the C-speed searchsorted fallback below
+    _note_shards(shards)
+    if shards > 1:
+        fn = _sharded_join(mesh, _use_kernel(mode),
+                           (mode == "interpret") or not _on_tpu())
+        hit = np.asarray(fn(jnp.asarray(pack_distinct(distinct_lists)),
+                            pmin, pmax))
+        return hit[:Q]
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         # np.asarray of a CPU-backed jax array is a view — the resident
         # plane is not copied.  A key k32 hits [pmin, pmax] iff
@@ -451,6 +610,7 @@ def bloom_probe_batched_device(
     enum_limit: int,
     mode: str = "auto",
     part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+    mesh=None,
 ) -> np.ndarray:
     """hit [Q, P] int32 — Q Bloom summaries vs the resident enumeration
     plane; row q equals the (fixed) host matcher's narrow-range
@@ -467,6 +627,24 @@ def bloom_probe_batched_device(
     """
     Q = len(blooms)
     P = int(pmin.shape[0])
+    shards = mesh_shards(mesh, P)
+    eb = enum_bucket(max(1, min(int(wmax), int(enum_limit))))
+    if (shards > 1 and not _use_kernel(mode)
+            and q_bucket(Q) * P * eb // shards > _REF_SLAB_ELEMS):
+        # the jnp oracle body is dense O(Q*P*E) — at fleet shapes the
+        # sparsity-aware host BlockedBloom fallback below wins (and the
+        # dense body could exhaust memory); only the kernel path shards
+        # unconditionally
+        shards = 1
+    _note_shards(shards)
+    if shards > 1:
+        lo, hi = pack_blooms(blooms)
+        width_eff = jnp.where(width <= enum_limit, width, 0).astype(jnp.int32)
+        fn = _sharded_bloom(mesh, _use_kernel(mode),
+                            (mode == "interpret") or not _on_tpu(), eb)
+        hit = np.asarray(fn(jnp.asarray(lo), jnp.asarray(hi),
+                            pmin, width_eff))
+        return hit[:Q]
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         # np.asarray of a CPU-backed jax array is a view — no copy.
         pmin_h = np.asarray(pmin)
@@ -501,6 +679,7 @@ def topk_init_batched_device(
     mask: np.ndarray,        # [Q, P] 1 where partition p is a candidate
     k: int,
     mode: str = "auto",
+    mesh=None,
 ) -> np.ndarray:
     """heap [Q, k] f32 — per-query top-k over masked resident plane rows.
 
@@ -522,6 +701,22 @@ def topk_init_batched_device(
     Pp = int(plane.shape[0])
     if mask.shape[1] < Pp:
         mask = np.pad(mask, ((0, 0), (0, Pp - mask.shape[1])))
+    shards = mesh_shards(mesh, Pp)
+    if (shards > 1 and not _use_kernel(mode)
+            and Q * Pp * int(plane.shape[1]) // shards > _REF_SLAB_ELEMS):
+        shards = 1     # dense O(Q*P*K) oracle body: the sparse numpy
+                       # gather below wins at fleet shapes
+    _note_shards(shards)
+    if shards > 1:
+        mask_d = jnp.asarray(mask.astype(np.float32).T)   # [Pp, Q]
+        fn = _sharded_topk(mesh, _use_kernel(mode),
+                           (mode == "interpret") or not _on_tpu(), k)
+        heaps = np.asarray(fn(plane, mask_d))             # [n, Q, k]
+        # Rank-selection merge of the per-shard heaps: top-k is a pure
+        # selection, so selecting k from the union of shard-local top-k
+        # heaps is exactly the global top-k (same value multiset).
+        allv = np.concatenate(list(heaps), axis=1)        # [Q, n*k]
+        return -np.sort(-allv, axis=1)[:, :k]
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         plane_np = np.asarray(plane)
         heap = np.full((Q, k), -np.inf, dtype=np.float32)

@@ -36,3 +36,24 @@ def make_host_mesh():
             model = m
             break
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_plane_mesh():
+    """The host's devices as one 1-D ``parts`` axis: the partition-shard
+    mesh of the metadata-plane kernels.
+
+    The resident ``[C, P]`` planes split their partition (capacity) dim
+    over this axis via ``shard_map``, so a table's P can grow past one
+    device's memory.  Plane capacities are powers of two, so the axis is
+    the largest power-of-two prefix of ``make_host_mesh()``'s device set
+    — every capacity >= the axis size divides evenly and shards.  On a
+    single-device host the mesh is size 1 and the launch path stays
+    unsharded (same code, no shard_map).
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = 1
+    while n * 2 <= len(devs):
+        n *= 2
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("parts",))

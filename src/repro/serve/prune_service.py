@@ -39,6 +39,16 @@ aggregate and per technique (``counters.technique``), and ``run_batch``
 attaches a snapshot to every report (``PruningReport.counters``) so
 benchmarks can attribute speedups per stage.
 
+Fleet scale (PR 5): ``budget_bytes`` puts every resident plane family
+under one HBM budget (``core.device_stats.PlaneMemoryManager`` — LRU
+eviction, in-flight pinning around each batched launch, hit / miss /
+eviction / restage-storm counters in ``counters["memory"]``), and
+``shard_mesh`` partition-shards every batched launch over a 1-D device
+mesh (``launch.mesh.make_plane_mesh``) so a table's planes can outgrow
+one device.  ``run_fleet`` drives a many-table workload — thousands of
+tables churning through the budget — and ``fleet_summary`` reports the
+budget-sizing view.
+
 DML: mutations made through the Table's own streaming methods
 (``append_partitions`` / ``drop_partitions`` / ``rewrite_partitions`` /
 ``update_column``) log ``TableDelta``s, and the resident planes
@@ -62,7 +72,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import expr as E
-from ..core.device_stats import DeviceStatsCache, PlaneEpoch
+from ..core.device_stats import (DeviceStatsCache, PlaneEpoch,
+                                 PlaneMemoryManager)
 from ..core.metadata import (FULL_MATCH, NO_MATCH, ScanSet, live_full_scan,
                              mask_dead_partitions)
 from ..core.predicate_cache import TableVersion
@@ -84,28 +95,33 @@ class ServiceCounters:
     scans: int = 0
     launches: int = 0          # batched kernel launches, all techniques
     host_fallbacks: int = 0    # host fallbacks, all techniques
+    sharded_launches: int = 0  # launches that ran partition-sharded
     # per-technique attribution: {'filter': {'launches': n, 'fallbacks': m}}
     technique: Dict[str, Dict[str, int]] = dataclasses.field(
         default_factory=dict)
 
-    def bump(self, tech: str, launches: int = 0, fallbacks: int = 0) -> None:
+    def bump(self, tech: str, launches: int = 0, fallbacks: int = 0,
+             sharded: int = 0) -> None:
         t = self.technique.setdefault(tech, dict(launches=0, fallbacks=0))
         t["launches"] += launches
         t["fallbacks"] += fallbacks
         self.launches += launches
         self.host_fallbacks += fallbacks
+        self.sharded_launches += sharded
 
     def snapshot(self) -> dict:
         return dict(queries=self.queries, scans=self.scans,
                     launches=self.launches,
                     host_fallbacks=self.host_fallbacks,
+                    sharded_launches=self.sharded_launches,
                     technique={k: dict(v) for k, v in self.technique.items()})
 
     @staticmethod
     def delta(before: dict, after: dict) -> dict:
         """after - before of two snapshots: the activity in between."""
         out = {k: after[k] - before[k]
-               for k in ("queries", "scans", "launches", "host_fallbacks")}
+               for k in ("queries", "scans", "launches", "host_fallbacks",
+                         "sharded_launches")}
         zero = dict(launches=0, fallbacks=0)
         out["technique"] = {
             t: {f: v - before["technique"].get(t, zero)[f]
@@ -119,11 +135,42 @@ class PruningService:
         self,
         mode: str = "auto",            # kernel mode: auto|pallas|interpret|ref
         cache: Optional[DeviceStatsCache] = None,
+        budget_bytes: Optional[int] = None,  # HBM budget across all resident
+                                             # plane families (None: unbounded)
+        shard_mesh=None,               # 1-D 'parts' mesh (True: build the
+                                       # host plane mesh) — partition-shards
+                                       # every batched launch
     ):
         self.mode = mode
-        self.cache = cache if cache is not None else DeviceStatsCache()
+        if cache is None:
+            cache = DeviceStatsCache(budget_bytes=budget_bytes)
+        elif budget_bytes is not None:
+            # A shared cache's budget belongs to whoever set it: only
+            # adopt ours when none is configured — silently re-budgeting
+            # a cache other services share would evict planes they
+            # sized their budget for.
+            if cache.memory.budget_bytes is None:
+                cache.memory.budget_bytes = budget_bytes
+            elif cache.memory.budget_bytes != budget_bytes:
+                raise ValueError(
+                    f"cache already budgeted at "
+                    f"{cache.memory.budget_bytes} bytes; refusing to "
+                    f"re-budget to {budget_bytes}")
+        self.cache = cache
+        if shard_mesh is True:
+            from ..launch.mesh import make_plane_mesh
+            shard_mesh = make_plane_mesh()
+        self.shard_mesh = shard_mesh
         self.versions: Dict[str, TableVersion] = {}
         self.counters = ServiceCounters()
+
+    @staticmethod
+    def _sharded() -> int:
+        """1 when the launch that just returned actually ran sharded
+        (the kernel wrappers can demote a mesh-eligible launch back to
+        unsharded when the jnp-oracle footprint exceeds the slab
+        bound — the counter reports what ran, not eligibility)."""
+        return 1 if kops.last_launch_shards() > 1 else 0
 
     # -- DML bookkeeping ----------------------------------------------------
 
@@ -201,9 +248,14 @@ class PruningService:
         if ranges is None:
             self.counters.bump("filter", fallbacks=1)
             return None
-        dstats = self.cache.get(spec.table, self.versions.get(spec.table.name))
-        self.counters.bump("filter", launches=1)
-        return kops.prune_ranges_batched_device([ranges], dstats, self.mode)[0]
+        with self.cache.pin_scope():
+            dstats = self.cache.get(spec.table,
+                                    self.versions.get(spec.table.name))
+            tv = kops.prune_ranges_batched_device(
+                [ranges], dstats, self.mode, mesh=self.shard_mesh)[0]
+            self.counters.bump("filter", launches=1,
+                               sharded=self._sharded())
+            return tv
 
     def prune_batch(self, queries: Sequence) -> List[Dict[str, ScanSet]]:
         """Filter-prune a batch of queries; per-query scan_name -> ScanSet.
@@ -229,10 +281,16 @@ class PruningService:
                 groups.setdefault(id(spec.table), (spec.table, []))[1].append(
                     (qi, name, ranges))
         for table, jobs in groups.values():
-            dstats = self.cache.get(table, self.versions.get(table.name))
-            tv_rows = kops.prune_ranges_batched_device(
-                [ranges for _, _, ranges in jobs], dstats, self.mode)
-            self.counters.bump("filter", launches=1)
+            # Pin scope: the planes this launch gathered from must not be
+            # evicted (by another table's staging under the budget) while
+            # the launch is in flight.
+            with self.cache.pin_scope():
+                dstats = self.cache.get(table, self.versions.get(table.name))
+                tv_rows = kops.prune_ranges_batched_device(
+                    [ranges for _, _, ranges in jobs], dstats, self.mode,
+                    mesh=self.shard_mesh)
+                self.counters.bump("filter", launches=1,
+                                   sharded=self._sharded())
             for (qi, name, _), tv in zip(jobs, tv_rows):
                 results[qi][name] = self._scan_set(tv, table)
         for qi, name, spec in fallbacks:
@@ -283,11 +341,13 @@ class PruningService:
         query's scan set (entries outside it are 0 and must not be read);
         the kernel path always evaluates the resident plane dense.
         """
-        pmin, pmax = self.cache.join_key_plane(table, key_col)
-        hit = kops.join_overlap_batched_device(
-            [s.distinct for s in summaries], pmin, pmax, self.mode,
-            part_ids_lists=part_ids)
-        self.counters.bump("join", launches=1)
+        with self.cache.pin_scope():
+            pmin, pmax = self.cache.join_key_plane(table, key_col)
+            hit = kops.join_overlap_batched_device(
+                [s.distinct for s in summaries], pmin, pmax, self.mode,
+                part_ids_lists=part_ids, mesh=self.shard_mesh)
+            self.counters.bump("join", launches=1,
+                               sharded=self._sharded())
         return hit
 
     def bloom_hit_batch(self, table, key_col: str,
@@ -298,11 +358,14 @@ class PruningService:
         one batched narrow-range enumeration launch over the resident
         enumeration plane (``part_ids`` restricts the no-Pallas fallback
         to each query's scan set, like ``join_hit_batch``)."""
-        pmin, width, wmax, _domain_ok = self.cache.enum_plane(table, key_col)
-        hit = kops.bloom_probe_batched_device(
-            [s.bloom for s in summaries], pmin, width, wmax, enum_limit,
-            self.mode, part_ids_lists=part_ids)
-        self.counters.bump("join_bloom", launches=1)
+        with self.cache.pin_scope():
+            pmin, width, wmax, _domain_ok = self.cache.enum_plane(table,
+                                                                  key_col)
+            hit = kops.bloom_probe_batched_device(
+                [s.bloom for s in summaries], pmin, width, wmax, enum_limit,
+                self.mode, part_ids_lists=part_ids, mesh=self.shard_mesh)
+            self.counters.bump("join_bloom", launches=1,
+                               sharded=self._sharded())
         return hit
 
     def join_hit(self, table, key_col: str, summary: BuildSummary,
@@ -360,9 +423,12 @@ class PruningService:
         if not any_candidates:
             return out                     # nothing to bound; skip the launch
         kb = kops.k_bucket(max(k for _, _, k in live))
-        plane = self.cache.block_topk_plane(table, order_col, desc)
-        heap = kops.topk_init_batched_device(plane, masks, kb, self.mode)
-        self.counters.bump("topk", launches=1)
+        with self.cache.pin_scope():
+            plane = self.cache.block_topk_plane(table, order_col, desc)
+            heap = kops.topk_init_batched_device(plane, masks, kb, self.mode,
+                                                 mesh=self.shard_mesh)
+            self.counters.bump("topk", launches=1,
+                               sharded=self._sharded())
         for row, (i, _scan, k) in enumerate(live):
             out[i] = float(heap[row, k - 1])
         return out
@@ -394,6 +460,7 @@ class PruningService:
         device = not pipeline.adaptive and pipeline.filter_mode == "device"
         before = self.counters.snapshot()
         before_staging = self.cache.staging_snapshot()
+        before_memory = self.cache.memory.snapshot()
         states = [pipeline.make_state(q) for q in queries]
         for tech in pipeline.techniques:
             tech.run_batch(pipeline, states, service=self if device else None)
@@ -402,6 +469,8 @@ class PruningService:
         after_staging = self.cache.staging_snapshot()
         staging = {k: after_staging[k] - before_staging[k]
                    for k in after_staging}
+        memory = PlaneMemoryManager.delta(before_memory,
+                                          self.cache.memory.snapshot())
         # PlaneEpoch per table touched by the batch: what the launches
         # actually ran against (version, live count, capacity) — the
         # check that a delta-staged batch served the same table state a
@@ -418,5 +487,31 @@ class PruningService:
                           "technique": {k: dict(v)
                                         for k, v in delta["technique"].items()},
                           "staging": dict(staging),
+                          "memory": dict(memory),
                           "planes": {k: dict(v) for k, v in planes.items()}}
         return reports
+
+    def run_fleet(self, batches: Sequence[Sequence], pipeline=None) -> List:
+        """The fleet-scale entry point: a *many-table* workload — a
+        sequence of query batches (e.g. rounds of skewed table
+        popularity) — driven through ``run_batch`` under the configured
+        memory budget and shard mesh.
+
+        Returns one report list per batch.  Each batch's reports carry
+        that batch's counter deltas (``counters["memory"]`` shows the
+        hits / misses / evictions / restage storms the LRU plane manager
+        paid for it); ``fleet_summary()`` aggregates the service-lifetime
+        view for budget sizing.
+        """
+        return [self.run_batch(b, pipeline) for b in batches]
+
+    def fleet_summary(self) -> dict:
+        """Service-lifetime memory + staging + launch counters: the
+        budget-sizing view (is the budget thrashing? what fraction of
+        getter traffic hit resident planes?)."""
+        mem = self.cache.memory.snapshot()
+        total = mem["hits"] + mem["misses"]
+        return dict(memory=mem,
+                    staging=self.cache.staging_snapshot(),
+                    counters=self.counters.snapshot(),
+                    plane_hit_rate=(mem["hits"] / total) if total else 0.0)

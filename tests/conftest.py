@@ -8,6 +8,20 @@ import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
 
+# Multi-device CPU for the sharded-plane tests: REPRO_CPU_DEVICES=n
+# forces n host devices before jax's backend initializes, so shard_map
+# really runs multi-device (the CI fleet lane sets 8).  Opt-in only —
+# the main suite keeps whatever device count the backend picks up
+# (several train-substrate tests encode it), and sharded tests skip
+# gracefully on a single device.  A pre-existing XLA_FLAGS device-count
+# setting is always respected.
+_n_cpu = os.environ.get("REPRO_CPU_DEVICES", "0")
+_flags = os.environ.get("XLA_FLAGS", "")
+if (_n_cpu.isdigit() and int(_n_cpu) > 0
+        and "xla_force_host_platform_device_count" not in _flags):
+    os.environ["XLA_FLAGS"] = (
+        _flags + f" --xla_force_host_platform_device_count={_n_cpu}").strip()
+
 from helpers import install_hypothesis_shim  # noqa: E402
 
 install_hypothesis_shim()

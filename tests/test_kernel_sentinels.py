@@ -14,10 +14,18 @@ never-prunable-wrong:
     where only keeping is safe,
   * sentinel block-top-k rows contribute nothing to a Sec. 5.4 boundary
     even when a (buggy) mask selects them.
+
+The sharded classes re-prove all of it through the ``shard_map``
+partition-sharded launch path: sentinels are placed on *every shard
+edge* (first and last slot of each shard of the plane mesh), where an
+off-by-one in shard slicing or a boundary-crossing reduction would
+surface — outputs must stay bit-identical to the unsharded launch.
 """
 
 import numpy as np
+import pytest
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.device_stats import _F32_MAX, DeviceStats
@@ -167,3 +175,114 @@ class TestBloomProbeSentinels:
             [b], jnp.asarray(pmin), jnp.asarray(width),
             int(width.max()), 1024, mode=m)) for m in MODES]
         np.testing.assert_array_equal(got[0], got[1])
+
+
+# ---------------------------------------------------------------------------
+# Sharded launch path: sentinels on every shard edge (interpret + ref)
+# ---------------------------------------------------------------------------
+
+def _shard_geometry():
+    """(mesh, cap, sentinel ids): EVERY shard's first and last slot is a
+    sentinel — including the final shard's trailing slot, the classic
+    last-chunk off-by-one position — while each shard keeps live
+    interior slots (cap = 4 slots per shard, so 2 live per shard)."""
+    if len(jax.devices()) < 2:
+        pytest.skip("sharded path needs >= 2 host devices "
+                    "(REPRO_CPU_DEVICES forces them; '0' opts out)")
+    from repro.launch.mesh import make_plane_mesh
+    mesh = make_plane_mesh()
+    n = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    cap = max(16, 4 * n)
+    assert ops.mesh_shards(mesh, cap) > 1
+    s = cap // n
+    sent = np.array(sorted({i * s for i in range(n)}
+                           | {i * s + s - 1 for i in range(n)}))
+    return mesh, cap, sent
+
+
+class TestShardedMinmaxSentinels:
+    def test_edge_sentinels_match_unsharded(self):
+        mesh, cap, sent = _shard_geometry()
+        rng = np.random.default_rng(6)
+        mins = rng.integers(-100, 100, cap).astype(np.float64)
+        maxs = mins + rng.integers(0, 50, cap)
+        mins[sent], maxs[sent] = np.inf, -np.inf     # drop sentinel, pre-cast
+        d = DeviceStats.stage(_stats(mins, maxs))
+        ranges = [
+            [(0, -50.0, 75.0)],
+            [(1, 0.0, np.inf)],
+            [(0, 42.0, 42.0), (1, -80.0, 120.0)],
+        ]
+        for mode in MODES:
+            flat = ops.prune_ranges_batched_device(ranges, d, mode=mode)
+            tv = ops.prune_ranges_batched_device(ranges, d, mode=mode,
+                                                 mesh=mesh)
+            np.testing.assert_array_equal(tv, flat, err_msg=mode)
+            assert (tv[:, sent] == 0).all(), mode
+
+
+class TestShardedJoinSentinels:
+    def test_edge_sentinels_match_unsharded(self):
+        mesh, cap, sent = _shard_geometry()
+        rng = np.random.default_rng(7)
+        pmin = rng.integers(-1000, 1000, cap).astype(np.float32)
+        pmax = pmin + rng.integers(0, 100, cap).astype(np.float32)
+        pmin[sent], pmax[sent] = _F32_MAX, -_F32_MAX
+        distinct = [
+            np.sort(rng.integers(-1200, 1200, 9)).astype(np.float32),
+            np.array([-_F32_MAX, 0.0, _F32_MAX], dtype=np.float32),
+        ]
+        for mode in MODES:
+            flat = ops.join_overlap_batched_device(
+                distinct, jnp.asarray(pmin), jnp.asarray(pmax), mode=mode)
+            hit = ops.join_overlap_batched_device(
+                distinct, jnp.asarray(pmin), jnp.asarray(pmax), mode=mode,
+                mesh=mesh)
+            np.testing.assert_array_equal(hit, flat, err_msg=mode)
+            assert (hit[:, sent] == 0).all(), mode
+
+
+class TestShardedTopKSentinels:
+    def test_edge_sentinels_match_unsharded(self):
+        mesh, cap, sent = _shard_geometry()
+        rng = np.random.default_rng(8)
+        K, k = 8, 4
+        plane = np.sort(rng.uniform(-100, 100, (cap, K)).astype(np.float32),
+                        axis=1)[:, ::-1].copy()
+        plane[sent] = -np.inf
+        # masks select across shard edges — including only-sentinel rows
+        mask = np.zeros((3, cap), dtype=np.float32)
+        mask[0, :] = 1.0
+        mask[1, sent] = 1.0                       # only sentinels: empty heap
+        mask[2, : cap // 2 + 1] = 1.0             # straddles a shard edge
+        for mode in MODES:
+            flat = ops.topk_init_batched_device(
+                jnp.asarray(plane), mask, k, mode=mode)
+            heap = ops.topk_init_batched_device(
+                jnp.asarray(plane), mask, k, mode=mode, mesh=mesh)
+            np.testing.assert_array_equal(heap, flat, err_msg=mode)
+            assert (heap[1] == -np.inf).all(), mode
+
+
+class TestShardedBloomSentinels:
+    def test_edge_sentinels_match_unsharded(self):
+        mesh, cap, sent = _shard_geometry()
+        rng = np.random.default_rng(9)
+        pmin = rng.integers(0, 500, cap).astype(np.int32)
+        width = rng.integers(1, 12, cap).astype(np.int32)
+        pmin[sent], width[sent] = 0, 0            # width 0 = sentinel = keep
+        blooms = []
+        for _ in range(2):
+            b = BlockedBloom(64)
+            b.add(rng.integers(0, 500, 40))
+            blooms.append(b)
+        wmax = int(width.max())
+        for mode in MODES:
+            flat = ops.bloom_probe_batched_device(
+                blooms, jnp.asarray(pmin), jnp.asarray(width), wmax, 1024,
+                mode=mode)
+            hit = ops.bloom_probe_batched_device(
+                blooms, jnp.asarray(pmin), jnp.asarray(width), wmax, 1024,
+                mode=mode, mesh=mesh)
+            np.testing.assert_array_equal(hit, flat, err_msg=mode)
+            assert (hit[:, sent] == 1).all(), mode
