@@ -367,6 +367,52 @@ def run_fleet_cell(n_tables: int = FLEET_TABLES, rounds: int = FLEET_ROUNDS,
     )
 
 
+RES_TABLES = 24
+RES_ROUNDS = 4
+RES_Q = 48
+
+
+def run_resilience_cell(n_tables: int = RES_TABLES,
+                        rounds: int = RES_ROUNDS, q: int = RES_Q) -> dict:
+    """No-fault overhead of the resilience layer (ISSUE 6).
+
+    Every launch now runs through the degradation ladder and every plane
+    read sits on the sampled checksum schedule; with no injector and
+    nothing failing, both must be bookkeeping — this cell times the same
+    fleet workload with verification off (``integrity_sample=0``, the
+    closest stand-in for the pre-resilience engine) vs the shipping
+    default (every 64th read verified), and asserts the ladder stayed on
+    its top rung throughout (zero demotions / retries / passthroughs).
+    """
+    rng = np.random.default_rng(31)
+    tables = _fleet_tables(n_tables, rng)
+    batches = _fleet_batches(tables, rng, rounds, q)
+
+    def timed(**kw):
+        svc = PruningService(mode="ref", **kw)
+        pipe = PruningPipeline(filter_mode="device", service=svc)
+        svc.run_fleet(batches, pipe)        # warm jits + planes
+        t0 = time.perf_counter()
+        svc.run_fleet(batches, pipe)
+        return svc, time.perf_counter() - t0
+
+    _bare, s_bare = timed(integrity_sample=0)
+    resilient, s_res = timed()              # default sampled verification
+
+    res = resilient.fleet_summary()["resilience"]
+    integ = resilient.cache.integrity_snapshot()
+    n_q = rounds * q
+    return dict(
+        tables=n_tables, rounds=rounds, q_per_round=q,
+        qps_baseline=n_q / s_bare, qps_resilient=n_q / s_res,
+        overhead=s_res / s_bare - 1.0,
+        demotions=sum(res["demotions"].values()),
+        retries=res["retries"], passthroughs=res["passthroughs"],
+        verifications=integ["verifications"],
+        checksum_failures=integ["checksum_failures"],
+    )
+
+
 def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         json_path: str = "BENCH_runtime_prune.json"):
     rng = np.random.default_rng(0)
@@ -457,6 +503,19 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         f"evictions, {fleet_cell['restage_storms']} storms, "
         f"identical={fleet_cell['bit_identical']}",
     ))
+    # Resilience cell (ISSUE 6): no-fault price of the degradation
+    # ladder + sampled plane-checksum verification.
+    resilience_cell = run_resilience_cell()
+    rows.append((
+        f"runtime_prune_resilience_T{resilience_cell['tables']}",
+        1e6 * resilience_cell["rounds"] * resilience_cell["q_per_round"]
+        / resilience_cell["qps_resilient"],
+        f"qps {resilience_cell['qps_resilient']:.0f} vs bare "
+        f"{resilience_cell['qps_baseline']:.0f} "
+        f"(+{100 * resilience_cell['overhead']:.1f}%) | "
+        f"{resilience_cell['verifications']} verifies, "
+        f"{resilience_cell['demotions']} demotions",
+    ))
     if csv:
         emit(rows)
     if json_path:
@@ -470,6 +529,7 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
             bloom=bloom_cell,
             ingest=ingest_cell,
             fleet=fleet_cell,
+            resilience=resilience_cell,
             acceptance=dict(
                 target="qps_batched >= 5x qps_loop at Q=256, P=100k",
                 speedup=accept[0]["speedup"] if accept else None,
@@ -497,6 +557,18 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
                 fleet_passed=bool(fleet_cell["bit_identical"]
                                   and fleet_cell["evictions"] > 0
                                   and fleet_cell["budget_held"]),
+                resilience_target=("no-fault cost of the degradation "
+                                   "ladder + sampled checksum "
+                                   "verification < 5% qps, ladder never "
+                                   "leaves its top rung"),
+                resilience_overhead=resilience_cell["overhead"],
+                resilience_overhead_ok=bool(
+                    resilience_cell["overhead"] < 0.05),
+                resilience_zero_demotions=bool(
+                    resilience_cell["demotions"] == 0
+                    and resilience_cell["retries"] == 0
+                    and resilience_cell["passthroughs"] == 0
+                    and resilience_cell["checksum_failures"] == 0),
             ),
         )
         with open(json_path, "w") as f:

@@ -45,6 +45,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import zlib
 from collections import OrderedDict
 from typing import Callable, Optional, Tuple
 
@@ -53,6 +54,33 @@ import numpy as np
 
 from .metadata import PartitionStats
 from .predicate_cache import TableVersion
+
+
+class PlaneIntegrityError(RuntimeError):
+    """A restaged plane failed checksum verification again.
+
+    Raised only after the quarantine protocol exhausted its one restage:
+    a resident plane's checksum mismatched, the plane was dropped and
+    restaged from host truth, and the fresh plane mismatched too (i.e.
+    the corruption source is persistent).  The serving layer's
+    degradation ladder treats this like any launch failure and demotes —
+    a wrong verdict is never served from a plane that failed its stamp.
+    """
+
+
+def plane_checksum(arrays) -> int:
+    """Cheap integrity stamp over a plane chunk's bytes (crc32).
+
+    Works identically on host numpy and device arrays (device arrays are
+    copied back to host — callers stamp from the *host* arrays at stage
+    time for free and only pay the D2H on the sampled verify schedule).
+    f32/i32 values round-trip the H2D copy bit-exactly, so a clean plane
+    always verifies.
+    """
+    c = 0
+    for a in arrays:
+        c = zlib.crc32(np.ascontiguousarray(np.asarray(a)).tobytes(), c)
+    return c
 
 _F32_NEG = np.float32(-np.inf)
 _F32_POS = np.float32(np.inf)
@@ -207,6 +235,10 @@ class DeviceStats:
     integral: np.ndarray   # [C] bool, host-side: int/dictionary-code column
     live_count: int = -1
     tv_version: Optional[int] = None   # service TableVersion seen at staging
+    # integrity stamp over the planes' bytes, computed host-side at stage
+    # time and re-stamped after every delta replay; the cache verifies it
+    # on a sampled read schedule and always after an eviction-restage
+    checksum: Optional[int] = None
 
     def __post_init__(self):
         planes, p = self.planes_state
@@ -300,6 +332,8 @@ class DeviceStats:
                            jnp.asarray(demote)), P),
             integral=integral,
             live_count=live_count,
+            # stamped from the host arrays pre-H2D: free at stage time
+            checksum=plane_checksum((mins32, maxs32, demote)),
         )
 
 
@@ -455,6 +489,11 @@ class PlaneMemoryManager:
         if self._evict_cb is not None:
             self._evict_cb(*fk)
 
+    def was_evicted(self, family: str, key: Tuple) -> bool:
+        """Whether this key has ever been budget-evicted — the cache
+        force-verifies the checksum on every restage of such a key."""
+        return (family, key) in self._ever_evicted
+
     def release(self, family: str, key: Tuple) -> None:
         """The cache dropped this entry itself (invalidate / restage)."""
         fk = (family, key)
@@ -609,7 +648,8 @@ class DeviceStatsCache:
     """
 
     def __init__(self, max_entries: int = 16, max_planes: int = 64,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 fault_injector=None, integrity_sample: int = 64):
         # (name, uid) -> DeviceStats ([C, cap] planes + epoch)
         self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
         self.max_entries = max_entries
@@ -647,13 +687,67 @@ class DeviceStatsCache:
         # manager mutation; pin scopes are tracked per thread.
         self._lock = threading.RLock()
         self._pin_local = threading.local()
+        # Plane integrity (resilience layer): every staged chunk carries
+        # a crc32 stamp; reads verify it every ``integrity_sample``-th
+        # getter hit (1 = every read — what the chaos suite uses so a
+        # corrupted plane can never serve a verdict; 0 = never sample)
+        # and ALWAYS right after a quarantine- or eviction-restage.  A
+        # mismatch quarantines the plane (drop + one restage from host
+        # truth); a second mismatch raises PlaneIntegrityError, which the
+        # serving ladder demotes past.  ``fault_injector`` is the chaos
+        # seam (serve.resilience.FaultInjector) — None costs one
+        # attribute load per site, nothing else.
+        self.fault_injector = fault_injector
+        self.integrity_sample = int(integrity_sample)
+        self._integrity_tick = 0
+        self._quarantined: set = set()
+        self.integrity = dict(verifications=0, checksum_failures=0,
+                              quarantines=0)
 
     # ---- memory-manager plumbing ---------------------------------------
 
     def _evict_family(self, family: str, key: Tuple) -> None:
         """Manager-initiated eviction: drop the entry from its store
         (the manager already removed its own record)."""
+        # pop before the fault seam: an injected eviction fault must not
+        # leave a store entry whose manager record is already gone
         self._stores[family].pop(key, None)
+        if self.fault_injector is not None:
+            self.fault_injector.fire("evict")
+
+    # ---- integrity plumbing --------------------------------------------
+
+    def _fire(self, site: str) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector.fire(site)
+
+    def _corrupt(self, site: str, arrays: Tuple) -> Tuple:
+        if self.fault_injector is not None:
+            return self.fault_injector.corrupt(site, arrays)
+        return arrays
+
+    def _verify_due(self) -> bool:
+        s = self.integrity_sample
+        if s <= 0:
+            return False
+        self._integrity_tick += 1
+        return self._integrity_tick % s == 0
+
+    def _verify(self, arrays, stamp: Optional[int]) -> bool:
+        self.integrity["verifications"] += 1
+        return stamp is None or plane_checksum(arrays) == stamp
+
+    def _quarantine(self, family: str, key: Tuple) -> None:
+        """A resident plane's bytes no longer match its stamp: count it,
+        drop the plane, and mark the key so the restage is verified."""
+        self.integrity["checksum_failures"] += 1
+        self.integrity["quarantines"] += 1
+        self._stores[family].pop(key, None)
+        self.memory.release(family, key)
+        self._quarantined.add((family, key))
+
+    def integrity_snapshot(self) -> dict:
+        return dict(self.integrity)
 
     def _pin_frames(self):
         frames = getattr(self._pin_local, "frames", None)
@@ -676,6 +770,15 @@ class DeviceStatsCache:
         try:
             yield
         finally:
+            # Exception safety is load-bearing here: a raise anywhere in
+            # the scope body (failed launch, injected staging fault, an
+            # eviction callback blowing up inside reclaim) must still
+            # release every pin this frame took, or the leaked refcounts
+            # permanently shrink the evictable set under the HBM budget.
+            # Every unpin is attempted even if one raises, and reclaim
+            # always runs; a reclaim failure (eviction-path fault) may
+            # propagate — with zero pins leaked — where the serving
+            # ladder treats it like any launch failure.
             with self._lock:
                 frames = self._pin_frames()
                 # remove by identity: nested scopes can hold equal-content
@@ -685,9 +788,18 @@ class DeviceStatsCache:
                     if frames[i] is frame:
                         del frames[i]
                         break
+                cleanup_exc = None
                 for fk in frame:
-                    self.memory.unpin(*fk)
-                self.memory.reclaim()
+                    try:
+                        self.memory.unpin(*fk)
+                    except Exception as exc:  # pragma: no cover - defensive
+                        cleanup_exc = exc
+                try:
+                    self.memory.reclaim()
+                except Exception as exc:
+                    cleanup_exc = exc
+                if cleanup_exc is not None:
+                    raise cleanup_exc
 
     def _scope_pin(self, family: str, key: Tuple) -> None:
         frames = self._pin_frames()
@@ -786,10 +898,15 @@ class DeviceStatsCache:
                 nbytes += 3 * P * 4
             else:                      # rewrite (or unknown): full restage
                 return False
-        # one atomic tuple store: an in-flight launch that already read
-        # e.planes_state keeps a consistent pre-replay (planes, P) pair,
-        # and a later read sees the full post-replay pair — never a mix
-        e.planes_state = ((mins, maxs, dem), stats.num_partitions)
+        # re-stamp from the clean replayed arrays, then let the chaos
+        # seam tear bytes *after* the stamp (exactly the corruption the
+        # verifier must catch); one atomic tuple store: an in-flight
+        # launch that already read e.planes_state keeps a consistent
+        # pre-replay (planes, P) pair, and a later read sees the full
+        # post-replay pair — never a mix
+        e.checksum = plane_checksum((mins, maxs, dem))
+        e.planes_state = (self._corrupt("stage.stat", (mins, maxs, dem)),
+                          stats.num_partitions)
         e.live_count = self._live_count(table)
         self.staged_bytes += nbytes
         self.delta_stages += 1
@@ -806,47 +923,79 @@ class DeviceStatsCache:
         log (legacy invalidation flow) also forces a restage.
         """
         with self._lock:
+            self._fire("get.stat")
             key = (table.name, table.stats.uid)
             tvv = tv.version if tv is not None else None
             tver = self._table_version(table)
             e = self.entries.get(key)
             if e is not None:
+                served = False
                 if e.version == tver and (tvv is None or e.tv_version in
                                           (None, tvv)):
                     self.hits += 1
                     if tvv is not None:
                         e.tv_version = tvv
-                    self.entries.move_to_end(key)
-                    self._touch("stat", key)
-                    return e
-                if e.version < tver:
+                    served = True
+                elif e.version < tver:
                     deltas = self._deltas_since(table, e.version)
                     if deltas is not None and self._replay_stats(e, table,
                                                                  deltas):
                         e.version = tver
                         e.tv_version = tvv
                         self.hits += 1
-                        self.entries.move_to_end(key)
-                        self._touch("stat", key)
+                        served = True
+                if served:
+                    self.entries.move_to_end(key)
+                    self._touch("stat", key)
+                    if not self._verify_due() or self._verify(e.planes,
+                                                              e.checksum):
                         return e
-                # stale and not replayable: rebuild below
-                self.full_restages += 1
-                self.memory.release("stat", key)
+                    # sampled verify caught a torn resident plane:
+                    # quarantine it and restage fresh below (verified)
+                    self._quarantine("stat", key)
+                else:
+                    # stale and not replayable: rebuild below
+                    self.full_restages += 1
+                    self.memory.release("stat", key)
             self.misses += 1
-            e = DeviceStats.stage(
-                table.stats, table.name, tver,
-                capacity=plane_capacity(table.stats.num_partitions),
-                live=getattr(table, "live", None))
-            e.tv_version = tvv
-            self.staged_bytes += e.nbytes
-            self._admit("stat", key, e.nbytes)
-            self.entries[key] = e
-            self.entries.move_to_end(key)
-            if self.memory.budget_bytes is None:
-                while len(self.entries) > self.max_entries:
-                    k, _ = self.entries.popitem(last=False)
-                    self.memory.release("stat", k)
-            return e
+            retried = False
+            while True:
+                self._fire("stage.stat")
+                e = DeviceStats.stage(
+                    table.stats, table.name, tver,
+                    capacity=plane_capacity(table.stats.num_partitions),
+                    live=getattr(table, "live", None))
+                e.tv_version = tvv
+                planes, logical_p = e.planes_state
+                e.planes_state = (self._corrupt("stage.stat", planes),
+                                  logical_p)
+                self.staged_bytes += e.nbytes
+                self._admit("stat", key, e.nbytes)
+                self.entries[key] = e
+                self.entries.move_to_end(key)
+                if self.memory.budget_bytes is None:
+                    while len(self.entries) > self.max_entries:
+                        k, _ = self.entries.popitem(last=False)
+                        self.memory.release("stat", k)
+                # a restage of a quarantined or previously-evicted key is
+                # ALWAYS verified, whatever the sampling schedule says;
+                # other fresh stages join the sampled schedule so a torn
+                # stage can't serve its first read unchecked
+                force = ("stat", key) in self._quarantined \
+                    or self.memory.was_evicted("stat", key) \
+                    or self._verify_due()
+                if not force or self._verify(e.planes, e.checksum):
+                    self._quarantined.discard(("stat", key))
+                    return e
+                if retried:
+                    self._quarantined.discard(("stat", key))
+                    self.entries.pop(key, None)
+                    self.memory.release("stat", key)
+                    raise PlaneIntegrityError(
+                        f"stat plane {key} failed checksum verification "
+                        f"after quarantine restage")
+                self._quarantine("stat", key)
+                retried = True
 
     # ---- runtime-technique planes --------------------------------------
 
@@ -865,13 +1014,10 @@ class DeviceStatsCache:
         if e is None:
             return None
         tver = self._table_version(table)
+        served = False
         if e.version == tver:
-            self.plane_hits += 1
-            store.move_to_end(key)
-            self._touch(family, key)
-            return e
-        ok = False
-        if e.version < tver:
+            served = True
+        elif e.version < tver:
             deltas = self._deltas_since(table, e.version)
             if deltas is not None and \
                     table.stats.num_partitions <= e.capacity:
@@ -896,14 +1042,58 @@ class DeviceStatsCache:
                     self.staged_bytes += nbytes
                     if staged:
                         self.delta_stages += 1
-                    self.plane_hits += 1
-                    store.move_to_end(key)
-                    self._touch(family, key)
-                    return e
+                        # re-stamp from the clean replayed arrays, then
+                        # the chaos seam may tear bytes post-stamp
+                        e.meta["checksum"] = plane_checksum(e.arrays)
+                        e.arrays = self._corrupt(f"stage.{family}",
+                                                 e.arrays)
+                    served = True
+        if served:
+            self.plane_hits += 1
+            store.move_to_end(key)
+            self._touch(family, key)
+            if not self._verify_due() or self._verify(e.arrays,
+                                                      e.meta.get("checksum")):
+                return e
+            # torn resident plane: quarantine; the caller stages fresh
+            # (and _plane_fresh force-verifies that restage)
+            self._quarantine(family, key)
+            return None
         del store[key]
         self.memory.release(family, key)
         self.full_restages += 1
         return None
+
+    def _plane_fresh(self, family: str, store: "OrderedDict", key: Tuple,
+                     build_fn) -> _PlaneEntry:
+        """Stage a fresh per-column plane with the integrity protocol:
+        stamp from the built arrays, admit, and force-verify whenever the
+        key was just quarantined or was ever budget-evicted; a verify
+        failure quarantines and rebuilds once, a second failure raises
+        ``PlaneIntegrityError`` (the serving ladder demotes past it)."""
+        retried = False
+        while True:
+            self._fire(f"stage.{family}")
+            e = build_fn()
+            e.meta["checksum"] = plane_checksum(e.arrays)
+            e.arrays = self._corrupt(f"stage.{family}", e.arrays)
+            e = self._plane_put(family, store, key, e)
+            fk = (family, key)
+            force = fk in self._quarantined \
+                or self.memory.was_evicted(family, key) \
+                or self._verify_due()
+            if not force or self._verify(e.arrays, e.meta["checksum"]):
+                self._quarantined.discard(fk)
+                return e
+            if retried:
+                self._quarantined.discard(fk)
+                store.pop(key, None)
+                self.memory.release(family, key)
+                raise PlaneIntegrityError(
+                    f"{family} plane {key} failed checksum verification "
+                    f"after quarantine restage")
+            self._quarantine(family, key)
+            retried = True
 
     def _plane_put(self, family: str, store: "OrderedDict", key: Tuple,
                    entry: _PlaneEntry) -> _PlaneEntry:
@@ -950,20 +1140,25 @@ class DeviceStatsCache:
         empty-interval sentinel (+f32max, -f32max) — never a hit either.
         """
         with self._lock:
+            self._fire("get.join_key")
             key = (table.name, table.stats.uid, key_col)
             e = self._plane_current("join_key", self.key_planes, key, table,
                                     key_col, self._key_append, self._key_drop)
             if e is not None:
                 return e.arrays
-            P = table.stats.num_partitions
-            cap = plane_capacity(P)
-            pmin = np.full(cap, _F32_MAX, dtype=np.float32)
-            pmax = np.full(cap, -_F32_MAX, dtype=np.float32)
-            pmin[:P], pmax[:P] = self._key_rows(table, key_col, 0, P)
-            e = _PlaneEntry(self._table_version(table), P,
-                            (jnp.asarray(pmin), jnp.asarray(pmax)),
-                            meta=dict(col=key_col))
-            return self._plane_put("join_key", self.key_planes, key, e).arrays
+
+            def build():
+                P = table.stats.num_partitions
+                cap = plane_capacity(P)
+                pmin = np.full(cap, _F32_MAX, dtype=np.float32)
+                pmax = np.full(cap, -_F32_MAX, dtype=np.float32)
+                pmin[:P], pmax[:P] = self._key_rows(table, key_col, 0, P)
+                return _PlaneEntry(self._table_version(table), P,
+                                   (jnp.asarray(pmin), jnp.asarray(pmax)),
+                                   meta=dict(col=key_col))
+
+            return self._plane_fresh("join_key", self.key_planes, key,
+                                     build).arrays
 
     def enum_plane(self, table, key_col: str) -> Tuple:
         """The key column's resident enumeration rows:
@@ -992,23 +1187,28 @@ class DeviceStatsCache:
         then makes irrelevant).
         """
         with self._lock:
+            self._fire("get.enum")
             key = (table.name, table.stats.uid, key_col)
             e = self._plane_current("enum", self.enum_planes, key, table,
                                     key_col, self._enum_append,
                                     self._enum_drop)
             if e is not None:
                 return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
-            P = table.stats.num_partitions
-            cap = plane_capacity(P)
-            pmin_h, width_h, wmax, domain_ok = self._enum_rows(table, key_col)
-            pmin = np.zeros(cap, dtype=np.int32)
-            width = np.zeros(cap, dtype=np.int32)
-            pmin[:P], width[:P] = pmin_h, width_h
-            e = _PlaneEntry(self._table_version(table), P,
-                            (jnp.asarray(pmin), jnp.asarray(width)),
-                            meta=dict(col=key_col, wmax=wmax,
-                                      domain_ok=domain_ok))
-            e = self._plane_put("enum", self.enum_planes, key, e)
+
+            def build():
+                P = table.stats.num_partitions
+                cap = plane_capacity(P)
+                pmin_h, width_h, wmax, domain_ok = self._enum_rows(table,
+                                                                   key_col)
+                pmin = np.zeros(cap, dtype=np.int32)
+                width = np.zeros(cap, dtype=np.int32)
+                pmin[:P], width[:P] = pmin_h, width_h
+                return _PlaneEntry(self._table_version(table), P,
+                                   (jnp.asarray(pmin), jnp.asarray(width)),
+                                   meta=dict(col=key_col, wmax=wmax,
+                                             domain_ok=domain_ok))
+
+            e = self._plane_fresh("enum", self.enum_planes, key, build)
             return e.arrays + (e.meta["wmax"], e.meta["domain_ok"])
 
     @staticmethod
@@ -1061,6 +1261,7 @@ class DeviceStatsCache:
         these rows is a *witnessed* Sec. 5.4 boundary.
         """
         with self._lock:
+            self._fire("get.block_topk")
             key = (table.name, table.stats.uid, order_col, bool(desc),
                    int(k_plane))
             e = self._plane_current("block_topk", self.topk_planes, key,
@@ -1068,16 +1269,21 @@ class DeviceStatsCache:
                                     self._topk_drop)
             if e is not None:
                 return e.arrays[0]
-            P = table.stats.num_partitions
-            cap = plane_capacity(P)
-            rows = np.full((cap, int(k_plane)), -np.inf, dtype=np.float32)
-            rows[:P] = self._topk_rows(table, order_col, bool(desc),
-                                       int(k_plane), 0, P)
-            e = _PlaneEntry(self._table_version(table), P,
-                            (jnp.asarray(rows),),
-                            meta=dict(col=order_col, desc=bool(desc)))
-            return self._plane_put("block_topk", self.topk_planes, key,
-                                   e).arrays[0]
+
+            def build():
+                P = table.stats.num_partitions
+                cap = plane_capacity(P)
+                rows = np.full((cap, int(k_plane)), -np.inf,
+                               dtype=np.float32)
+                rows[:P] = self._topk_rows(table, order_col, bool(desc),
+                                           int(k_plane), 0, P)
+                return _PlaneEntry(self._table_version(table), P,
+                                   (jnp.asarray(rows),),
+                                   meta=dict(col=order_col,
+                                             desc=bool(desc)))
+
+            return self._plane_fresh("block_topk", self.topk_planes, key,
+                                     build).arrays[0]
 
     @staticmethod
     def _topk_rows(table, order_col: str, desc: bool, k_plane: int,

@@ -382,6 +382,11 @@ class JoinTechnique(Technique):
                 table, key_col, [s for _, s in members],
                 part_ids=[st.scan_sets[st.query.join.probe].part_ids
                           for st, _ in members])
+            if hits is None:
+                # the service's ladder degraded this group past the
+                # device rungs: the host matcher (hit=None per member)
+                # is the stage's exact terminal rung
+                hits = [None] * len(members)
             for (st, summary), hit in zip(members, hits):
                 self._apply(pipe, st, summary, hit)
         for table, key_col, members in bloom_groups.values():
@@ -389,6 +394,8 @@ class JoinTechnique(Technique):
                 table, key_col, [s for _, s in members],
                 part_ids=[st.scan_sets[st.query.join.probe].part_ids
                           for st, _ in members])
+            if hits is None:
+                hits = [None] * len(members)
             for (st, summary), hit in zip(members, hits):
                 self._apply(pipe, st, summary, hit)
         for st, summary in host_jobs:

@@ -405,6 +405,37 @@ def prune_ranges_batched_device(
     return tv
 
 
+def prune_ranges_batched_host(
+    range_lists: Sequence[List[Tuple[int, float, float]]],
+    stats: PartitionStats,
+) -> np.ndarray:
+    """Pure-numpy host fallback for the batched range kernel.
+
+    The degradation ladder's third rung: same ``[Q, P]`` int8 verdict
+    contract as ``prune_ranges_batched_device`` but evaluated directly
+    on the host f64 stats — no device, no staged planes, no f32 cast, so
+    it is bit-identical to the per-query ``eval_tv`` host oracle on
+    every predicate whose ranges lowered (the closed-interval semantics:
+    NO when the partition interval misses [lo, hi], FULL when it sits
+    inside with no nulls, PARTIAL otherwise; constraints AND via min).
+    An empty range list is the TruePred lowering: everything FULL.
+    """
+    P = stats.num_partitions
+    tv = np.full((len(range_lists), P), 2, dtype=np.int8)
+    mins, maxs = stats.mins, stats.maxs            # [P, C] float64
+    has_nulls = stats.null_counts > 0
+    for qi, ranges in enumerate(range_lists):
+        row = np.full(P, 2, dtype=np.int8)
+        for cid, lo, hi in ranges:
+            pmin, pmax = mins[:, cid], maxs[:, cid]
+            no = (pmax < lo) | (pmin > hi)
+            full = (pmin >= lo) & (pmax <= hi) & ~has_nulls[:, cid]
+            row = np.minimum(
+                row, np.where(no, 0, np.where(full, 2, 1)).astype(np.int8))
+        tv[qi] = row
+    return tv
+
+
 # ---------------------------------------------------------------------------
 # Top-k / join staging
 # ---------------------------------------------------------------------------

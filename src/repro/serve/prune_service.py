@@ -74,12 +74,14 @@ import numpy as np
 from ..core import expr as E
 from ..core.device_stats import (DeviceStatsCache, PlaneEpoch,
                                  PlaneMemoryManager)
-from ..core.metadata import (FULL_MATCH, NO_MATCH, ScanSet, live_full_scan,
-                             mask_dead_partitions)
+from ..core.metadata import (FULL_MATCH, NO_MATCH, PARTIAL_MATCH, ScanSet,
+                             live_full_scan, mask_dead_partitions)
 from ..core.predicate_cache import TableVersion
 from ..core.prune_filter import eval_tv, extract_ranges
 from ..core.prune_join import DEFAULT_ENUM_LIMIT, BuildSummary
 from ..kernels import ops as kops
+from .resilience import (DegradationLadder, new_resilience_counters,
+                         resilience_delta, resilience_snapshot)
 
 # Boundary-init k cap: the kernel's rank-selection merge is quadratic in
 # (k bucket + KPLANE), so the per-step comparison tensor must stay well
@@ -140,22 +142,44 @@ class PruningService:
         shard_mesh=None,               # 1-D 'parts' mesh (True: build the
                                        # host plane mesh) — partition-shards
                                        # every batched launch
+        fault_injector=None,           # serve.resilience.FaultInjector chaos
+                                       # seam (None: zero-overhead disabled)
+        backoff=None,                  # resilience.BackoffPolicy for the
+                                       # degradation ladder's retries
+        deadline_s: Optional[float] = None,  # per-rung deadline (seconds)
+        clock=None,                    # injectable monotonic clock (tests)
+        sleep=None,                    # injectable sleep (tests: no real
+                                       # sleeps under the fake clock)
+        integrity_sample: Optional[int] = None,  # cache checksum-verify
+                                       # schedule: every n-th read (1 =
+                                       # every read; None keeps the
+                                       # cache's default)
     ):
         self.mode = mode
         if cache is None:
-            cache = DeviceStatsCache(budget_bytes=budget_bytes)
-        elif budget_bytes is not None:
-            # A shared cache's budget belongs to whoever set it: only
-            # adopt ours when none is configured — silently re-budgeting
-            # a cache other services share would evict planes they
-            # sized their budget for.
-            if cache.memory.budget_bytes is None:
-                cache.memory.budget_bytes = budget_bytes
-            elif cache.memory.budget_bytes != budget_bytes:
-                raise ValueError(
-                    f"cache already budgeted at "
-                    f"{cache.memory.budget_bytes} bytes; refusing to "
-                    f"re-budget to {budget_bytes}")
+            cache = DeviceStatsCache(
+                budget_bytes=budget_bytes, fault_injector=fault_injector,
+                **({} if integrity_sample is None
+                   else dict(integrity_sample=integrity_sample)))
+        else:
+            # adopt the chaos/integrity configuration onto a shared cache
+            # only where it has none of its own (mirrors the budget rule)
+            if fault_injector is not None and cache.fault_injector is None:
+                cache.fault_injector = fault_injector
+            if integrity_sample is not None:
+                cache.integrity_sample = int(integrity_sample)
+            if budget_bytes is not None:
+                # A shared cache's budget belongs to whoever set it: only
+                # adopt ours when none is configured — silently
+                # re-budgeting a cache other services share would evict
+                # planes they sized their budget for.
+                if cache.memory.budget_bytes is None:
+                    cache.memory.budget_bytes = budget_bytes
+                elif cache.memory.budget_bytes != budget_bytes:
+                    raise ValueError(
+                        f"cache already budgeted at "
+                        f"{cache.memory.budget_bytes} bytes; refusing to "
+                        f"re-budget to {budget_bytes}")
         self.cache = cache
         if shard_mesh is True:
             from ..launch.mesh import make_plane_mesh
@@ -163,6 +187,23 @@ class PruningService:
         self.shard_mesh = shard_mesh
         self.versions: Dict[str, TableVersion] = {}
         self.counters = ServiceCounters()
+        # The resilience layer: every batched launch executes through the
+        # degradation ladder (sharded -> device -> host kernel -> host
+        # oracle -> passthrough), so a kernel failure, a torn plane, or a
+        # deadline costs pruning quality, never correctness and never an
+        # exception out of run_batch.  The counters dict is shared with
+        # the ladder so demotions/retries surface per batch under
+        # ``PruningReport.counters["resilience"]``.
+        self.fault_injector = (fault_injector if fault_injector is not None
+                               else cache.fault_injector)
+        self.resilience = new_resilience_counters()
+        self.ladder = DegradationLadder(
+            policy=backoff, deadline_s=deadline_s, clock=clock, sleep=sleep,
+            counters=self.resilience)
+
+    def _fire(self, site: str) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector.fire(site)
 
     @staticmethod
     def _sharded() -> int:
@@ -234,8 +275,79 @@ class PruningService:
         keep = tv > NO_MATCH
         return ScanSet(np.where(keep)[0], tv[keep])
 
+    @staticmethod
+    def _passthrough_set(table) -> ScanSet:
+        """The ladder's bottom rung: keep every live partition, PARTIAL.
+
+        Never FULL — an uncertified partition declared FULL would let the
+        LIMIT cutter and the top-k boundary initializers trust rows the
+        predicate was never checked against (the same demotion
+        ``flow._prune_scan`` applies with the filter stage disabled)."""
+        ss = live_full_scan(table)
+        return ScanSet(ss.part_ids,
+                       np.full(len(ss), PARTIAL_MATCH, dtype=np.int8))
+
+    def _device_rungs(self, tech: str, launch_fn) -> list:
+        """The device rungs of a ladder chain: sharded (only with a
+        mesh), then unsharded.  ``launch_fn(mesh, rung_site)`` builds the
+        thunk."""
+        rungs = []
+        if self.shard_mesh is not None:
+            rungs.append(("sharded",
+                          launch_fn(self.shard_mesh, f"launch.{tech}:sharded")))
+        rungs.append(("device", launch_fn(None, f"launch.{tech}:device")))
+        return rungs
+
+    def _filter_rungs(self, table, range_lists, preds) -> list:
+        """The filter stage's full five-rung chain for one table group.
+
+        Every rung returns the same contract: tv ``[Q, P]`` int8 rows
+        (None from the passthrough rung — the caller keeps every live
+        partition as PARTIAL).  The host kernel is exact f64 over the
+        same lowered ranges; the host oracle re-evaluates each predicate
+        tree — both bit-identical to ``eval_tv`` for lowerable
+        predicates, so stopping at either rung costs latency, not
+        pruning quality.
+        """
+        def launch(mesh, site):
+            def thunk():
+                self._fire(site)
+                # Pin scope: the planes this launch gathers from must not
+                # be evicted (by another table's staging under the
+                # budget) while the launch is in flight.
+                with self.cache.pin_scope():
+                    dstats = self.cache.get(table,
+                                            self.versions.get(table.name))
+                    tv = kops.prune_ranges_batched_device(
+                        range_lists, dstats, self.mode, mesh=mesh)
+                    self.counters.bump("filter", launches=1,
+                                       sharded=self._sharded())
+                return tv
+            return thunk
+
+        def host_kernel():
+            self._fire("launch.filter:host_kernel")
+            tv = kops.prune_ranges_batched_host(range_lists, table.stats)
+            self.counters.bump("filter", fallbacks=1)
+            return tv
+
+        def host_oracle():
+            self._fire("launch.filter:host_oracle")
+            tv = np.stack([np.asarray(eval_tv(pred, table.stats),
+                                      dtype=np.int8) for pred in preds])
+            self.counters.bump("filter", fallbacks=1)
+            return tv
+
+        return self._device_rungs("filter", launch) + [
+            ("host_kernel", host_kernel),
+            ("host_oracle", host_oracle),
+            ("passthrough", lambda: None),
+        ]
+
     def scan_tv(self, spec) -> Optional[np.ndarray]:
-        """Device tv [P] for one scan, or None when it doesn't lower.
+        """Device tv [P] for one scan, or None when it doesn't lower (or
+        when the ladder degraded past the host kernel — the caller's own
+        host evaluator takes over either way).
 
         The single-query fast path of the batched plane: resident stats,
         Q padded to one sublane tile.  ``PruningPipeline`` calls this for
@@ -248,24 +360,28 @@ class PruningService:
         if ranges is None:
             self.counters.bump("filter", fallbacks=1)
             return None
-        with self.cache.pin_scope():
-            dstats = self.cache.get(spec.table,
-                                    self.versions.get(spec.table.name))
-            tv = kops.prune_ranges_batched_device(
-                [ranges], dstats, self.mode, mesh=self.shard_mesh)[0]
-            self.counters.bump("filter", launches=1,
-                               sharded=self._sharded())
-            return tv
+        # device rungs + host kernel; the terminal rung hands back None
+        # so flow's _prune_scan runs its own eval_tv host path
+        rungs = self._filter_rungs(spec.table, [ranges], [spec.pred])[:-2]
+        rungs.append(("host_oracle", lambda: None))
+        tv_rows, _rung = self.ladder.execute(rungs)
+        if tv_rows is None:
+            self.counters.bump("filter", fallbacks=1)
+            return None
+        return tv_rows[0]
 
     def prune_batch(self, queries: Sequence) -> List[Dict[str, ScanSet]]:
         """Filter-prune a batch of queries; per-query scan_name -> ScanSet.
 
-        One batched kernel launch per distinct table (not per query);
-        queries whose predicates don't lower are evaluated on the host.
+        One batched kernel launch per distinct table (not per query),
+        executed through the degradation ladder; queries whose predicates
+        don't lower are evaluated on the host, and a scan whose every
+        prover failed (malformed spec slipping past validation) degrades
+        to a keep-everything PARTIAL set — counted, never raised.
         """
         self.counters.queries += len(queries)
         results: List[Dict[str, ScanSet]] = [dict() for _ in queries]
-        # id(table) -> (table, [(query idx, scan name, ranges), ...])
+        # id(table) -> (table, [(query idx, scan name, ranges, pred), ...])
         groups: Dict[int, Tuple[object, list]] = {}
         fallbacks: List[Tuple[int, str, object]] = []
         for qi, q in enumerate(queries):
@@ -274,29 +390,38 @@ class PruningService:
                 if isinstance(spec.pred, E.TruePred):
                     results[qi][name] = live_full_scan(spec.table)
                     continue
-                ranges = extract_ranges(spec.pred, spec.table.stats)
+                try:
+                    ranges = extract_ranges(spec.pred, spec.table.stats)
+                except Exception:
+                    # malformed spec (unknown column / bad literal):
+                    # isolate to this scan, keep the batch on course
+                    self.resilience["errors"] += 1
+                    results[qi][name] = self._passthrough_set(spec.table)
+                    continue
                 if ranges is None:
                     fallbacks.append((qi, name, spec))
                     continue
                 groups.setdefault(id(spec.table), (spec.table, []))[1].append(
-                    (qi, name, ranges))
+                    (qi, name, ranges, spec.pred))
         for table, jobs in groups.values():
-            # Pin scope: the planes this launch gathered from must not be
-            # evicted (by another table's staging under the budget) while
-            # the launch is in flight.
-            with self.cache.pin_scope():
-                dstats = self.cache.get(table, self.versions.get(table.name))
-                tv_rows = kops.prune_ranges_batched_device(
-                    [ranges for _, _, ranges in jobs], dstats, self.mode,
-                    mesh=self.shard_mesh)
-                self.counters.bump("filter", launches=1,
-                                   sharded=self._sharded())
-            for (qi, name, _), tv in zip(jobs, tv_rows):
+            tv_rows, _rung = self.ladder.execute(self._filter_rungs(
+                table, [ranges for _, _, ranges, _ in jobs],
+                [pred for _, _, _, pred in jobs]))
+            if tv_rows is None:          # passthrough: fail prune-less
+                for qi, name, _ranges, _pred in jobs:
+                    results[qi][name] = self._passthrough_set(table)
+                continue
+            for (qi, name, _ranges, _pred), tv in zip(jobs, tv_rows):
                 results[qi][name] = self._scan_set(tv, table)
         for qi, name, spec in fallbacks:
             self.counters.bump("filter", fallbacks=1)
-            results[qi][name] = self._scan_set(
-                eval_tv(spec.pred, spec.table.stats), spec.table)
+            try:
+                tv = eval_tv(spec.pred, spec.table.stats)
+            except Exception:
+                self.resilience["errors"] += 1
+                results[qi][name] = self._passthrough_set(spec.table)
+                continue
+            results[qi][name] = self._scan_set(tv, spec.table)
         return results
 
     # -- join stage ---------------------------------------------------------
@@ -334,38 +459,71 @@ class PruningService:
     def join_hit_batch(self, table, key_col: str,
                        summaries: Sequence[BuildSummary],
                        part_ids: Optional[Sequence[np.ndarray]] = None
-                       ) -> np.ndarray:
+                       ) -> Optional[np.ndarray]:
         """hit [G, P] for a (table, key column) group — one launch.
 
         ``part_ids`` optionally restricts the no-Pallas fallback to each
         query's scan set (entries outside it are 0 and must not be read);
         the kernel path always evaluates the resident plane dense.
+        Returns None when the ladder degraded past the device rungs —
+        the caller's host matcher is this stage's exact terminal rung
+        (``prune_probe`` recomputes the overlap from host truth, so a
+        degraded join loses latency, never pruning quality).
         """
-        with self.cache.pin_scope():
-            pmin, pmax = self.cache.join_key_plane(table, key_col)
-            hit = kops.join_overlap_batched_device(
-                [s.distinct for s in summaries], pmin, pmax, self.mode,
-                part_ids_lists=part_ids, mesh=self.shard_mesh)
-            self.counters.bump("join", launches=1,
-                               sharded=self._sharded())
+        def launch(mesh, site):
+            def thunk():
+                self._fire(site)
+                with self.cache.pin_scope():
+                    pmin, pmax = self.cache.join_key_plane(table, key_col)
+                    hit = kops.join_overlap_batched_device(
+                        [s.distinct for s in summaries], pmin, pmax,
+                        self.mode, part_ids_lists=part_ids, mesh=mesh)
+                    self.counters.bump("join", launches=1,
+                                       sharded=self._sharded())
+                return hit
+            return thunk
+
+        def host_oracle():
+            self.counters.bump("join", fallbacks=len(summaries))
+            return None
+
+        hit, _rung = self.ladder.execute(
+            self._device_rungs("join", launch)
+            + [("host_oracle", host_oracle)])
         return hit
 
     def bloom_hit_batch(self, table, key_col: str,
                         summaries: Sequence[BuildSummary],
                         part_ids: Optional[Sequence[np.ndarray]] = None,
-                        enum_limit: int = DEFAULT_ENUM_LIMIT) -> np.ndarray:
+                        enum_limit: int = DEFAULT_ENUM_LIMIT
+                        ) -> Optional[np.ndarray]:
         """hit [G, P] for a (table, key column) group of Bloom summaries —
         one batched narrow-range enumeration launch over the resident
         enumeration plane (``part_ids`` restricts the no-Pallas fallback
-        to each query's scan set, like ``join_hit_batch``)."""
-        with self.cache.pin_scope():
-            pmin, width, wmax, _domain_ok = self.cache.enum_plane(table,
-                                                                  key_col)
-            hit = kops.bloom_probe_batched_device(
-                [s.bloom for s in summaries], pmin, width, wmax, enum_limit,
-                self.mode, part_ids_lists=part_ids, mesh=self.shard_mesh)
-            self.counters.bump("join_bloom", launches=1,
-                               sharded=self._sharded())
+        to each query's scan set, like ``join_hit_batch``).  None when
+        the ladder degraded to the exact host matcher."""
+        def launch(mesh, site):
+            def thunk():
+                self._fire(site)
+                with self.cache.pin_scope():
+                    pmin, width, wmax, _domain_ok = self.cache.enum_plane(
+                        table, key_col)
+                    hit = kops.bloom_probe_batched_device(
+                        [s.bloom for s in summaries], pmin, width, wmax,
+                        enum_limit, self.mode, part_ids_lists=part_ids,
+                        mesh=mesh)
+                    self.counters.bump("join_bloom", launches=1,
+                                       sharded=self._sharded())
+                return hit
+            return thunk
+
+        def host_oracle():
+            self.counters.bump("join_bloom", fallbacks=len(summaries))
+            return None
+
+        hit, _rung = self.ladder.execute(
+            self._device_rungs("join_bloom", launch)
+            + [("host_oracle", host_oracle)])
         return hit
 
     def join_hit(self, table, key_col: str, summary: BuildSummary,
@@ -383,10 +541,13 @@ class PruningService:
             return None
         pid = None if part_ids is None else [part_ids]
         if summary.distinct is not None:
-            return self.join_hit_batch(table, key_col, [summary],
-                                       part_ids=pid)[0]
-        return self.bloom_hit_batch(table, key_col, [summary],
-                                    part_ids=pid)[0]
+            hit = self.join_hit_batch(table, key_col, [summary],
+                                      part_ids=pid)
+        else:
+            hit = self.bloom_hit_batch(table, key_col, [summary],
+                                       part_ids=pid)
+        # None: the ladder degraded to the host matcher terminal rung
+        return None if hit is None else hit[0]
 
     # -- top-k stage --------------------------------------------------------
 
@@ -423,12 +584,31 @@ class PruningService:
         if not any_candidates:
             return out                     # nothing to bound; skip the launch
         kb = kops.k_bucket(max(k for _, _, k in live))
-        with self.cache.pin_scope():
-            plane = self.cache.block_topk_plane(table, order_col, desc)
-            heap = kops.topk_init_batched_device(plane, masks, kb, self.mode,
-                                                 mesh=self.shard_mesh)
-            self.counters.bump("topk", launches=1,
-                               sharded=self._sharded())
+
+        def launch(mesh, site):
+            def thunk():
+                self._fire(site)
+                with self.cache.pin_scope():
+                    plane = self.cache.block_topk_plane(table, order_col,
+                                                        desc)
+                    heap = kops.topk_init_batched_device(plane, masks, kb,
+                                                         self.mode, mesh=mesh)
+                    self.counters.bump("topk", launches=1,
+                                       sharded=self._sharded())
+                return heap
+            return thunk
+
+        def host_oracle():
+            # -inf floors: run_topk's own boundary discovery takes over —
+            # a weaker starting boundary, never a wrong result
+            self.counters.bump("topk", fallbacks=1)
+            return None
+
+        heap, _rung = self.ladder.execute(
+            self._device_rungs("topk", launch)
+            + [("host_oracle", host_oracle)])
+        if heap is None:
+            return out
         for row, (i, _scan, k) in enumerate(live):
             out[i] = float(heap[row, k - 1])
         return out
@@ -443,6 +623,43 @@ class PruningService:
 
     # -- workload driver ----------------------------------------------------
 
+    def _validate_query(self, q) -> None:
+        """Raise the spec's own error for a malformed query spec.
+
+        Probes each scan's predicate against a one-partition stats slice
+        (O(1) per scan, not O(P)) so unknown columns and bad literal
+        dtypes surface *here*, at validation time — ``run_batch``
+        isolates the raise to this query instead of letting it abort the
+        batch mid-launch.  Join/order-by column names are checked the
+        same way.
+        """
+        for spec in q.scans.values():
+            stats = spec.table.stats
+            probe = (stats.select(np.zeros(1, dtype=np.int64))
+                     if stats.num_partitions > 1 else stats)
+            eval_tv(spec.pred, probe)
+        if q.join is not None:
+            for scan_name, col in ((q.join.build, q.join.build_key),
+                                   (q.join.probe, q.join.probe_key)):
+                q.scans[scan_name].table.stats.col_id(col)
+        if q.order_by is not None:
+            scan_name, col, _desc = q.order_by
+            q.scans[scan_name].table.stats.col_id(col)
+
+    def _passthrough_report(self, pipeline, q):
+        """A no-prune report for a query the engine refused to run
+        (malformed spec / unsalvageable failure): every scan keeps all
+        live partitions as PARTIAL, no technique applied."""
+        from ..core.flow import TechniqueReport
+        st = pipeline.make_state(q)
+        for name, spec in q.scans.items():
+            ss = self._passthrough_set(spec.table)
+            st.scan_sets[name] = ss
+            st.per_scan[name]["filter"] = TechniqueReport(
+                spec.table.num_partitions, len(ss), applied=False,
+                detail=dict(path="passthrough"))
+        return pipeline.finish(st)
+
     def run_batch(self, queries: Sequence, pipeline=None) -> List:
         """Full pruning pipelines over a workload, every device-eligible
         stage batched per table group.
@@ -450,7 +667,18 @@ class PruningService:
         Returns one ``PruningReport`` per query, identical to running
         ``pipeline.run(q)`` per query in the same mode.  Each report
         carries its own copy of THIS batch's counter delta (not the
-        service-lifetime totals) for per-stage attribution.
+        service-lifetime totals) for per-stage attribution, including the
+        resilience block (``counters["resilience"]``: retries, demotions
+        per rung, passthroughs, deadline hits, isolated errors) and the
+        plane-integrity block (``counters["integrity"]``).
+
+        Failure contract: ``run_batch`` never raises for a query-shaped
+        problem.  Malformed specs are caught at validation time and
+        returned as no-prune passthrough reports (``errors`` counter);
+        launch/staging/plane failures degrade through the ladder inside
+        each stage; an unexpected batch-level failure falls back to
+        per-query execution, and a query that still fails gets a
+        passthrough report.
         """
         from ..core.flow import PruningPipeline
         if pipeline is None:
@@ -461,16 +689,55 @@ class PruningService:
         before = self.counters.snapshot()
         before_staging = self.cache.staging_snapshot()
         before_memory = self.cache.memory.snapshot()
-        states = [pipeline.make_state(q) for q in queries]
-        for tech in pipeline.techniques:
-            tech.run_batch(pipeline, states, service=self if device else None)
-        reports = [pipeline.finish(s) for s in states]
+        before_res = resilience_snapshot(self.resilience)
+        before_integrity = self.cache.integrity_snapshot()
+        # satellite: per-query spec validation — one malformed query
+        # becomes one passthrough report, the rest stay on the fast path
+        invalid: Dict[int, object] = {}
+        valid: List[Tuple[int, object]] = []
+        for i, q in enumerate(queries):
+            try:
+                self._validate_query(q)
+            except Exception:
+                self.resilience["errors"] += 1
+                invalid[i] = q
+            else:
+                valid.append((i, q))
+        states = [pipeline.make_state(q) for _, q in valid]
+        try:
+            for tech in pipeline.techniques:
+                tech.run_batch(pipeline, states,
+                               service=self if device else None)
+            good = [pipeline.finish(s) for s in states]
+        except Exception:
+            # Last-resort guard: something outside the ladder's reach
+            # broke the batched drive (a host-stage bug, a summary raise).
+            # Salvage per query; a query that still fails degrades to a
+            # passthrough report instead of taking the batch down.
+            self.resilience["salvaged_batches"] += 1
+            good = []
+            for _i, q in valid:
+                try:
+                    good.append(pipeline.run(q))
+                except Exception:
+                    self.resilience["errors"] += 1
+                    good.append(self._passthrough_report(pipeline, q))
+        reports: List = [None] * len(queries)
+        for (i, _q), rep in zip(valid, good):
+            reports[i] = rep
+        for i, q in invalid.items():
+            reports[i] = self._passthrough_report(pipeline, q)
         delta = ServiceCounters.delta(before, self.counters.snapshot())
         after_staging = self.cache.staging_snapshot()
         staging = {k: after_staging[k] - before_staging[k]
                    for k in after_staging}
         memory = PlaneMemoryManager.delta(before_memory,
                                           self.cache.memory.snapshot())
+        res = resilience_delta(before_res,
+                               resilience_snapshot(self.resilience))
+        after_integrity = self.cache.integrity_snapshot()
+        integrity = {k: after_integrity[k] - before_integrity[k]
+                     for k in after_integrity}
         # PlaneEpoch per table touched by the batch: what the launches
         # actually ran against (version, live count, capacity) — the
         # check that a delta-staged batch served the same table state a
@@ -488,6 +755,9 @@ class PruningService:
                                         for k, v in delta["technique"].items()},
                           "staging": dict(staging),
                           "memory": dict(memory),
+                          "resilience": {**res,
+                                         "demotions": dict(res["demotions"])},
+                          "integrity": dict(integrity),
                           "planes": {k: dict(v) for k, v in planes.items()}}
         return reports
 
@@ -514,4 +784,6 @@ class PruningService:
         return dict(memory=mem,
                     staging=self.cache.staging_snapshot(),
                     counters=self.counters.snapshot(),
+                    resilience=resilience_snapshot(self.resilience),
+                    integrity=self.cache.integrity_snapshot(),
                     plane_hit_rate=(mem["hits"] / total) if total else 0.0)
