@@ -1,12 +1,32 @@
-"""Batched device pruning vs the per-query staging loop.
+"""Batched device pruning: per-query loop vs flat batch vs tree batch.
 
 The device plane's pitch (ISSUE 1): at workload scale the pruning decision
 itself must be cheap, so metadata is staged once per table version and Q
 queries ride one batched kernel launch instead of Q stagings + Q launches.
-This bench measures queries/sec of both regimes over P in {10k, 100k, 1M}
-partitions and Q in {1, 16, 256} queries, on the jnp ref backend (the
-container has no TPU; the staging overhead being amortized — host gather,
-f32 cast, H2D copy, dispatch — is real on every backend).
+ISSUE 7 adds the hierarchical tree plane on top: a group pre-pass prices
+the batch against surviving partition groups instead of all P, so the
+batched path stops collapsing linearly as P grows.
+
+The workload models the paper's setting.  Partition stats are *clustered*
+(per-column sorted minima, width a few multiples of the inter-partition
+spacing) — Snowflake micro-partitions inherit natural clustering from
+ingestion order, which is exactly what makes min/max pruning effective at
+all.  Queries carry one narrow constraint with a *fixed absolute span*
+(~SPAN_PARTS partitions regardless of P — production queries bound their
+result set, they don't grow it with the table) plus wide extra
+constraints.  Under that model the flat batch pays O(Q*P) while survivors
+stay constant, which is precisely the regime the tree exploits.
+
+Grid: P in {10k, 100k, 1M} x Q in {1, 16, 256} on the jnp ref backend
+(the container has no TPU; the costs being amortized — host gather, f32
+cast, H2D copy, dispatch — are real on every backend).  Acceptance gates:
+
+- legacy: qps_batched >= 5x qps_loop at Q=256, P=100k;
+- sublinear (ISSUE 7): qps_batched(P=1M) >= 0.5 * qps_batched(P=100k)
+  at Q=256;
+- dense guard (ISSUE 7): with >50% of groups surviving, the tree path
+  skips its pre-pass launches entirely, so its wall time stays within
+  ~1.15x of the flat launch (two launches must never be slower than one).
 
 Emits machine-readable ``BENCH_batched_prune.json`` next to the CSV rows.
 """
@@ -19,7 +39,8 @@ import time
 
 import numpy as np
 
-from repro.core.device_stats import DeviceStats
+from repro.core.device_stats import (
+    TREE_FANOUT, DeviceStats, plane_capacity, tree_entry_for)
 from repro.core.metadata import ColumnMeta, PartitionStats
 from repro.kernels import ops
 
@@ -35,31 +56,59 @@ C = 6                 # metadata columns
 MAX_K = 4             # constraints per query (bucketed to Kb=4)
 LOOP_SAMPLE = 32      # per-query loop cost is constant: time a sample,
                       # extrapolate to Q (keeps the 1M-partition cell sane)
+SPAN_PARTS = 512      # absolute survivor span of the narrow constraint
+DENSE_Q = 64          # batch size of the dense-survivor guard cell
+DENSE_MAX_RATIO = 1.15
 
 
 def make_stats(P: int, rng) -> PartitionStats:
+    """Clustered stats: sorted per-column minima over [-1000, 1000]."""
     cols = [ColumnMeta(f"c{i}", "float") for i in range(C)]
-    mins = rng.uniform(-1000, 1000, size=(P, C)).astype(np.float32)
-    maxs = mins + rng.uniform(0, 100, size=(P, C)).astype(np.float32)
+    spacing = 2000.0 / P
+    mins = np.empty((P, C), dtype=np.float64)
+    for ci in range(C):
+        mins[:, ci] = np.sort(rng.uniform(-1000, 1000, size=P))
+    maxs = mins + spacing * rng.uniform(0.5, 4.0, size=(P, C))
     return PartitionStats(
         columns=cols,
-        mins=mins.astype(np.float64),
-        maxs=maxs.astype(np.float64),
+        mins=mins,
+        maxs=maxs,
         null_counts=np.zeros((P, C), dtype=np.int64),
         row_counts=np.full(P, 100, dtype=np.int64),
     )
 
 
-def make_queries(Q: int, rng):
-    """Q conjunctive-range queries; f32-exact bounds, 1..MAX_K constraints."""
+def make_queries(Q: int, rng, P: int):
+    """Q conjunctive-range queries, 1..MAX_K constraints each.
+
+    The first constraint is narrow — fixed absolute span of ~SPAN_PARTS
+    partitions on a random column; any extras are wide (full-domain) on
+    other columns.  Bounds are f32-exact.
+    """
+    width = np.float32(2000.0 * SPAN_PARTS / P)
     out = []
     for _ in range(Q):
         k = int(rng.integers(1, MAX_K + 1))
         cids = rng.choice(C, size=k, replace=False)
-        lo = rng.uniform(-1000, 1000, size=k).astype(np.float32)
-        hi = (lo + rng.uniform(0, 500, size=k).astype(np.float32)).astype(np.float32)
-        out.append([(int(c), float(l), float(h))
-                    for c, l, h in zip(cids, lo, hi)])
+        lo0 = np.float32(rng.uniform(-1000.0, 1000.0 - float(width)))
+        q = [(int(cids[0]), float(lo0), float(np.float32(lo0 + width)))]
+        for c in cids[1:]:
+            q.append((int(c), float(np.float32(rng.uniform(-1600, -1200))),
+                      float(np.float32(rng.uniform(1200, 1600)))))
+        out.append(q)
+    return out
+
+
+def make_dense_queries(Q: int, rng):
+    """Wide-only queries: every constraint keeps the whole domain, so
+    >50% of groups survive and the tree path must decline its pre-pass."""
+    out = []
+    for _ in range(Q):
+        k = int(rng.integers(1, MAX_K + 1))
+        cids = rng.choice(C, size=k, replace=False)
+        out.append([(int(c), float(np.float32(rng.uniform(-1600, -1200))),
+                     float(np.float32(rng.uniform(1200, 1600))))
+                    for c in cids])
     return out
 
 
@@ -73,20 +122,62 @@ def _time(fn, repeats: int) -> float:
     return float(np.median(times))
 
 
+def _dense_cell(grid_p, rng) -> dict:
+    """Dense-survivor guard: tree wall time vs flat when >50% of groups
+    survive the coarse check.  Runs at the largest grid P in [1024, 200k]
+    (big enough for tree eligibility, small enough to repeat)."""
+    eligible = [P for P in grid_p if 1024 <= P <= 200_000]
+    if not eligible:
+        return dict(skipped=True)
+    P = max(eligible)
+    stats = make_stats(P, rng)
+    dstats = DeviceStats.stage(stats, capacity=plane_capacity(P))
+    tree = tree_entry_for(dstats)
+    queries = make_dense_queries(DENSE_Q, rng)
+
+    def flat():
+        ops.prune_ranges_batched_device(queries, dstats, mode="ref")
+
+    def treed():
+        ops.prune_ranges_batched_tree(queries, dstats, tree, mode="ref")
+
+    flat(), treed()                           # warm jit caches
+    # Interleave the repeats: the ratio is the pinned quantity, and
+    # back-to-back blocks let clock/load drift masquerade as overhead.
+    fs, ts = [], []
+    for _ in range(9):
+        t0 = time.perf_counter(); flat(); fs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); treed(); ts.append(time.perf_counter() - t0)
+    s_flat, s_tree = float(np.median(fs)), float(np.median(ts))
+    note = ops.last_tree_stats()
+    return dict(
+        P=P, Q=DENSE_Q,
+        us_total_flat=s_flat * 1e6,
+        us_total_tree=s_tree * 1e6,
+        tree_over_flat=s_tree / s_flat,
+        tree_path=note.get("path"),
+        coarse_density=note.get("coarse_density"),
+    )
+
+
 def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
-        json_path: str = "BENCH_batched_prune.json"):
+        json_path: str = "BENCH_batched_prune.json",
+        loop_sample: int = LOOP_SAMPLE):
     rng = np.random.default_rng(0)
     rows, cells = [], []
     for P in grid_p:
         stats = make_stats(P, rng)
-        dstats = DeviceStats.stage(stats)     # once per table version
+        # Pow-2 capacity (the cache's own staging geometry) so the tree
+        # fanout divides the plane; dense capacity P generally doesn't.
+        dstats = DeviceStats.stage(stats, capacity=plane_capacity(P))
+        tree = tree_entry_for(dstats)
         repeats = 3 if P <= 100_000 else 1
         for Q in grid_q:
-            queries = make_queries(Q, rng)
+            queries = make_queries(Q, rng, P)
 
             # Regime A — per-query loop: every query re-gathers the [K, P]
             # slice on the host, re-uploads, launches the 1-query kernel.
-            sample = queries[:min(Q, LOOP_SAMPLE)]
+            sample = queries[:min(Q, loop_sample)]
 
             def loop():
                 for ranges in sample:
@@ -96,44 +187,97 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
             s_loop = _time(loop, repeats) / len(sample)   # sec per query
             qps_loop = 1.0 / s_loop
 
-            # Regime B — batched: resident planes, one launch for all Q.
-            def batched():
+            # Regime B — flat batch: resident planes, one launch over the
+            # full [C, Pc] plane for all Q.
+            def flat():
                 ops.prune_ranges_batched_device(queries, dstats, mode="ref")
 
-            batched()                         # warm jit caches
-            s_batched = _time(batched, repeats)
-            qps_batched = Q / s_batched
+            flat()                            # warm jit caches
+            s_flat = _time(flat, repeats)
+
+            # Regime C — tree batch (the shipped batched path): host
+            # coarse check, then gathered pre-pass + leaf eval over
+            # surviving groups only.
+            def treed():
+                ops.prune_ranges_batched_tree(queries, dstats, tree,
+                                              mode="ref")
+
+            treed()                           # warm jit caches
+            s_tree = _time(treed, repeats)
+            note = ops.last_tree_stats()
+            qps_batched = Q / s_tree
 
             cell = dict(
                 P=P, Q=Q,
                 us_per_query_loop=s_loop * 1e6,
-                us_total_batched=s_batched * 1e6,
+                us_total_flat=s_flat * 1e6,
+                us_total_batched=s_tree * 1e6,
                 qps_loop=qps_loop,
+                qps_flat=Q / s_flat,
                 qps_batched=qps_batched,
                 speedup=qps_batched / qps_loop,
+                tree_vs_flat=s_flat / s_tree,
+                tree_path=note.get("path"),
             )
             cells.append(cell)
             rows.append((
                 f"batched_prune_P{P}_Q{Q}",
-                s_batched * 1e6,
+                s_tree * 1e6,
                 f"qps_batched={qps_batched:.0f} qps_loop={qps_loop:.0f} "
-                f"x{cell['speedup']:.1f}",
+                f"x{cell['speedup']:.1f} tree_vs_flat="
+                f"{cell['tree_vs_flat']:.1f}",
             ))
+    dense = _dense_cell(grid_p, rng)
+    if csv and not dense.get("skipped"):
+        rows.append((
+            f"batched_prune_dense_P{dense['P']}_Q{dense['Q']}",
+            dense["us_total_tree"],
+            f"tree_over_flat={dense['tree_over_flat']:.2f} "
+            f"path={dense['tree_path']}",
+        ))
     if csv:
         emit(rows)
     if json_path:
-        accept = [c for c in cells if c["P"] == 100_000 and c["Q"] == 256]
+        def cell_at(P, Q):
+            hits = [c for c in cells if c["P"] == P and c["Q"] == Q]
+            return hits[0] if hits else None
+
+        legacy = cell_at(100_000, 256)
+        big = cell_at(1_000_000, 256)
+        sub_ratio = (big["qps_batched"] / legacy["qps_batched"]
+                     if legacy and big else None)
         payload = dict(
             bench="batched_prune",
             backend="ref",
             columns=C,
             max_constraints=MAX_K,
-            loop_sample=LOOP_SAMPLE,
+            loop_sample=loop_sample,
+            span_parts=SPAN_PARTS,
+            tree_fanout=TREE_FANOUT,
             grid=cells,
+            dense_cell=dense,
             acceptance=dict(
-                target="qps_batched >= 5x qps_loop at Q=256, P=100k",
-                speedup=accept[0]["speedup"] if accept else None,
-                passed=bool(accept and accept[0]["speedup"] >= 5.0),
+                batched_speedup=dict(
+                    target="qps_batched >= 5x qps_loop at Q=256, P=100k",
+                    speedup=legacy["speedup"] if legacy else None,
+                    passed=(bool(legacy["speedup"] >= 5.0)
+                            if legacy else None),
+                ),
+                sublinear=dict(
+                    target=("qps_batched(P=1M) >= 0.5 * qps_batched"
+                            "(P=100k) at Q=256"),
+                    ratio=sub_ratio,
+                    passed=(bool(sub_ratio >= 0.5)
+                            if sub_ratio is not None else None),
+                ),
+                dense_guard=dict(
+                    target=(f"tree wall time <= {DENSE_MAX_RATIO}x flat "
+                            "when >50% of groups survive"),
+                    tree_over_flat=dense.get("tree_over_flat"),
+                    passed=(bool(dense["tree_over_flat"]
+                                 <= DENSE_MAX_RATIO)
+                            if not dense.get("skipped") else None),
+                ),
             ),
         )
         with open(json_path, "w") as f:
@@ -145,8 +289,15 @@ def main():
     # BENCH_JSON_DIR is set by benchmarks/run.py from --json-dir; empty
     # means JSON emission is disabled.  Standalone runs default to CWD.
     json_dir = os.environ.get("BENCH_JSON_DIR", ".")
-    run(json_path=os.path.join(json_dir, "BENCH_batched_prune.json")
-        if json_dir else "")
+    json_path = (os.path.join(json_dir, "BENCH_batched_prune.json")
+                 if json_dir else "")
+    if os.environ.get("BENCH_CI"):
+        # CI sublinear-lane smoke: one 1M cell plus its 100k reference,
+        # small Q and loop sample so the lane stays fast.
+        run(grid_p=(100_000, 1_000_000), grid_q=(64,), json_path=json_path,
+            loop_sample=4)
+    else:
+        run(json_path=json_path)
 
 
 if __name__ == "__main__":

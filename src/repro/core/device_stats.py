@@ -339,6 +339,54 @@ class DeviceStats:
 
 KPLANE = 64   # block-top-k plane width: values kept per partition
 
+# Hierarchical (tree) plane geometry.  The flat [C, cap] planes aggregate
+# into [C, G] *group* planes (G = cap / fanout; both powers of two, so the
+# division is exact) — group g's interval is the min/max hull of its
+# members, so a query range that misses the hull misses every member: the
+# batched kernels can prune whole groups before touching leaves (the
+# paper's Sec. 3.2/4.3 adaptive tree, device-resident).  A second, tiny
+# *coarse* level (at most TREE_COARSE_MAX root groups) lives host-side in
+# the same plane entry: it both restricts the fine pre-pass (log-depth
+# refinement) and prices the pre-pass before launching it (the >50%-dense
+# fallback).  Below fanout * TREE_MIN_GROUPS partitions the flat launch
+# wins and the tree path is skipped entirely.
+TREE_FANOUT = 256
+TREE_MIN_GROUPS = 4
+TREE_COARSE_MAX = 64
+
+
+def coarse_from_groups(gmins, gmaxs) -> Tuple[np.ndarray, np.ndarray]:
+    """Host [C, G2] root hull of the [C, G] group planes (G2 <= 64)."""
+    gm = np.asarray(gmins)
+    gx = np.asarray(gmaxs)
+    C, G = gm.shape
+    g2 = min(G, TREE_COARSE_MAX)
+    f2 = G // g2
+    cmins = gm.reshape(C, g2, f2).min(axis=2)
+    cmaxs = gx.reshape(C, g2, f2).max(axis=2)
+    return cmins, cmaxs
+
+
+def aggregate_tree_planes(mins, maxs, demote, fanout: int) -> Tuple:
+    """Aggregate flat [C, cap] planes into the tree plane arrays.
+
+    Returns ``(gmins, gmaxs, gdem, cmins, cmaxs)``: device [C, G] group
+    hulls (min of member mins / max of member maxs / max of member
+    demotes) plus the host coarse root level.  Sentinel slots
+    (+f32max, -f32max) aggregate to an empty hull only when the whole
+    group is sentinels — a live member's interval always widens the hull,
+    so group NO_MATCH implies member NO_MATCH with no special-casing.
+    """
+    C, cap = mins.shape
+    if fanout <= 0 or cap % fanout:
+        raise ValueError(f"fanout {fanout} must divide plane capacity {cap}")
+    G = cap // fanout
+    gmins = mins.reshape(C, G, fanout).min(axis=2)
+    gmaxs = maxs.reshape(C, G, fanout).max(axis=2)
+    gdem = demote.reshape(C, G, fanout).max(axis=2)
+    cmins, cmaxs = coarse_from_groups(gmins, gmaxs)
+    return gmins, gmaxs, gdem, cmins, cmaxs
+
 
 @dataclasses.dataclass
 class _PlaneEntry:
@@ -361,6 +409,25 @@ class _PlaneEntry:
     @property
     def nbytes(self) -> int:
         return int(sum(int(a.nbytes) for a in self.arrays))
+
+
+def tree_entry_for(dstats: "DeviceStats", fanout: int = TREE_FANOUT,
+                   version: int = 0,
+                   logical_p: Optional[int] = None) -> _PlaneEntry:
+    """Build a standalone hierarchical plane entry from a flat entry.
+
+    Benchmarks and tests that stage ``DeviceStats`` directly (no table /
+    cache) use this to get the same entry shape ``tree_plane`` serves:
+    group + coarse arrays in ``arrays``, geometry in ``meta``.  The
+    cache's build path delegates here so the two can never drift.
+    """
+    arrays = aggregate_tree_planes(*dstats.planes, fanout=fanout)
+    return _PlaneEntry(
+        version,
+        dstats.num_partitions if logical_p is None else int(logical_p),
+        arrays,
+        meta=dict(fanout=fanout, cap=dstats.capacity,
+                  groups=int(arrays[0].shape[1])))
 
 
 @dataclasses.dataclass
@@ -649,7 +716,15 @@ class DeviceStatsCache:
 
     def __init__(self, max_entries: int = 16, max_planes: int = 64,
                  budget_bytes: Optional[int] = None,
-                 fault_injector=None, integrity_sample: int = 64):
+                 fault_injector=None, integrity_sample: int = 64,
+                 tree_fanout: int = TREE_FANOUT):
+        if tree_fanout < 2 or tree_fanout & (tree_fanout - 1):
+            raise ValueError(
+                f"tree_fanout must be a power of two >= 2, got {tree_fanout}")
+        # Leaf partitions per tree-plane group; plane capacities are
+        # powers of two with >= 25% headroom, so any pow-2 fanout <= cap
+        # divides a table's capacity exactly.
+        self.tree_fanout = int(tree_fanout)
         # (name, uid) -> DeviceStats ([C, cap] planes + epoch)
         self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
         self.max_entries = max_entries
@@ -662,6 +737,10 @@ class DeviceStatsCache:
         self.enum_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
         # (name, uid, col, desc, k) -> _PlaneEntry(([cap, k] signed rows,))
         self.topk_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        # (name, uid) -> _PlaneEntry((gmins, gmaxs, gdem) [C, G] device
+        # group hulls + (cmins, cmaxs) host coarse root — all five arrays
+        # under one CRC stamp; meta: fanout, cap, groups)
+        self.tree_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
         self.max_planes = max_planes
         self.plane_hits = 0
         self.plane_misses = 0
@@ -677,7 +756,8 @@ class DeviceStatsCache:
         self.memory = PlaneMemoryManager(budget_bytes)
         self._stores = {"stat": self.entries, "join_key": self.key_planes,
                         "enum": self.enum_planes,
-                        "block_topk": self.topk_planes}
+                        "block_topk": self.topk_planes,
+                        "tree_stat": self.tree_planes}
         self.memory.bind(self._evict_family)
         # Epoch check + plane read must be atomic per getter: under the
         # eviction path a concurrent version bump / invalidate between
@@ -1324,6 +1404,125 @@ class DeviceStatsCache:
         e.arrays = (rows.at[ids].set(-jnp.inf),)
         return len(part_ids) * int(rows.shape[1]) * 4
 
+# -- hierarchical (tree) planes --
+
+    def _tree_replay(self, e: _PlaneEntry, table, dstats: DeviceStats,
+                     deltas) -> Optional[int]:
+        """Re-aggregate only the dirtied groups from the current flat
+        planes; returns staged bytes, or None when a full rebuild is
+        required (rewrite, unknown delta, unknown column).
+
+        The flat entry ``dstats`` is already current (the caller syncs it
+        first), so group hulls re-derive on device with no extra H2D:
+        appends dirty only the touched tail groups, drops only the
+        dropped ids' groups, and a column update re-aggregates that
+        column's group row.  The host coarse level re-derives from the
+        group arrays afterwards (one small D2H).
+        """
+        fanout = e.meta["fanout"]
+        gm, gx, gd = e.arrays[:3]
+        C, G = int(gm.shape[0]), int(gm.shape[1])
+        mins, maxs, dem = dstats.planes
+        dirty: set = set()
+        rows: set = set()
+        for d in deltas:
+            if d.kind == "append":
+                dirty.update(range(d.part_lo // fanout,
+                                   (max(d.part_hi, d.part_lo + 1) - 1)
+                                   // fanout + 1))
+            elif d.kind == "drop":
+                dirty.update(int(p) // fanout
+                             for p in np.asarray(d.part_ids).tolist())
+            elif d.kind == "update":
+                try:
+                    rows.add(table.stats.col_id(d.column))
+                except KeyError:
+                    return None
+            else:                  # rewrite (or unknown): full rebuild
+                return None
+        nbytes = 0
+        if dirty:
+            gids = np.fromiter(sorted(dirty), dtype=np.int32)
+            idx = (gids[:, None].astype(np.int64) * fanout
+                   + np.arange(fanout)[None, :]).reshape(-1)
+            idx_d = jnp.asarray(idx.astype(np.int32))
+            jg = jnp.asarray(gids)
+            sm = jnp.take(mins, idx_d, axis=1).reshape(C, len(gids), fanout)
+            sx = jnp.take(maxs, idx_d, axis=1).reshape(C, len(gids), fanout)
+            sd = jnp.take(dem, idx_d, axis=1).reshape(C, len(gids), fanout)
+            gm = gm.at[:, jg].set(sm.min(axis=2))
+            gx = gx.at[:, jg].set(sx.max(axis=2))
+            gd = gd.at[:, jg].set(sd.max(axis=2))
+            nbytes += 3 * C * len(gids) * 4
+        for ci in sorted(rows):
+            row = slice(0, G * fanout)
+            gm = gm.at[ci].set(mins[ci, row].reshape(G, fanout).min(axis=1))
+            gx = gx.at[ci].set(maxs[ci, row].reshape(G, fanout).max(axis=1))
+            gd = gd.at[ci].set(dem[ci, row].reshape(G, fanout).max(axis=1))
+            nbytes += 3 * G * 4
+        cmins, cmaxs = coarse_from_groups(gm, gx)
+        e.arrays = (gm, gx, gd, cmins, cmaxs)
+        return nbytes
+
+    def tree_plane(self, table, dstats: DeviceStats) -> _PlaneEntry:
+        """The table's resident hierarchical plane entry, brought current.
+
+        ``dstats`` must be the table's *current* flat entry (from
+        ``get``): the tree arrays are pure aggregations of it, so delta
+        maintenance re-aggregates dirtied groups from the resident flat
+        planes instead of restaging from host truth.  Full member of the
+        integrity protocol: CRC-stamped at build and after every replay
+        (the stamp covers the host coarse level too — it participates in
+        pruning decisions), sampled-verified on read, force-verified
+        after quarantine/eviction restage, ``PlaneIntegrityError`` on a
+        second failure (the serving ladder demotes to the flat rungs).
+        A geometry change (capacity growth, fanout reconfig) rebuilds.
+        """
+        with self._lock:
+            self._fire("get.tree_stat")
+            key = (table.name, table.stats.uid)
+            fanout = self.tree_fanout
+            tver = self._table_version(table)
+            e = self.tree_planes.get(key)
+            if e is not None:
+                served = False
+                geometry_ok = (e.meta["fanout"] == fanout
+                               and e.meta["cap"] == dstats.capacity)
+                if geometry_ok and e.version == tver:
+                    served = True
+                elif geometry_ok and e.version < tver:
+                    deltas = self._deltas_since(table, e.version)
+                    if deltas is not None:
+                        nbytes = self._tree_replay(e, table, dstats, deltas)
+                        if nbytes is not None:
+                            e.version = tver
+                            e.logical_p = table.stats.num_partitions
+                            self.staged_bytes += nbytes
+                            self.delta_stages += 1
+                            e.meta["checksum"] = plane_checksum(e.arrays)
+                            e.arrays = self._corrupt("stage.tree_stat",
+                                                     e.arrays)
+                            served = True
+                if served:
+                    self.plane_hits += 1
+                    self.tree_planes.move_to_end(key)
+                    self._touch("tree_stat", key)
+                    if not self._verify_due() or self._verify(
+                            e.arrays, e.meta.get("checksum")):
+                        return e
+                    self._quarantine("tree_stat", key)
+                else:
+                    self.tree_planes.pop(key, None)
+                    self.memory.release("tree_stat", key)
+                    self.full_restages += 1
+
+            def build():
+                return tree_entry_for(dstats, fanout=fanout, version=tver,
+                                      logical_p=table.stats.num_partitions)
+
+            return self._plane_fresh("tree_stat", self.tree_planes, key,
+                                     build)
+
     def invalidate(self, table_name: str, column: Optional[str] = None
                    ) -> None:
         """Drop staged planes for a table.
@@ -1338,6 +1537,12 @@ class DeviceStatsCache:
             for k in stale:
                 del self.entries[k]
                 self.memory.release("stat", k)
+            # tree planes aggregate every column, exactly like the [C, P]
+            # stat planes they derive from: any invalidation drops them
+            stale = [k for k in self.tree_planes if k[0] == table_name]
+            for k in stale:
+                del self.tree_planes[k]
+                self.memory.release("tree_stat", k)
             for family, store in (("join_key", self.key_planes),
                                   ("enum", self.enum_planes),
                                   ("block_topk", self.topk_planes)):
@@ -1378,6 +1583,6 @@ class DeviceStatsCache:
         with self._lock:
             total = sum(e.nbytes for e in self.entries.values())
             for store in (self.key_planes, self.enum_planes,
-                          self.topk_planes):
+                          self.topk_planes, self.tree_planes):
                 total += sum(e.nbytes for e in store.values())
             return total

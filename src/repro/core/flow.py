@@ -542,6 +542,11 @@ class PruningPipeline:
                                      # service's batched launches over the
                                      # host plane mesh (shard_map on
                                      # launch.mesh.make_plane_mesh()).
+        tree_fanout: Optional[int] = None,
+                                     # hierarchical-plane group size for the
+                                     # lazily-built service (None keeps the
+                                     # cache default; tests shrink it so
+                                     # small tables take the tree rungs).
     ):
         self.adaptive = adaptive
         self.topk_strategy = topk_strategy
@@ -552,16 +557,18 @@ class PruningPipeline:
         self.enable_topk = enable_topk
         self.join_ndv_limit = join_ndv_limit
         self.filter_mode = filter_mode
-        if service is not None and (budget_bytes is not None or shard_planes):
+        if service is not None and (budget_bytes is not None or shard_planes
+                                    or tree_fanout is not None):
             # Silently dropping these would run the fleet unbounded /
             # unsharded — the exact failure they exist to prevent.
             raise ValueError(
-                "budget_bytes / shard_planes configure the lazily-built "
-                "service; pass them to the PruningService itself when "
-                "providing one")
+                "budget_bytes / shard_planes / tree_fanout configure the "
+                "lazily-built service; pass them to the PruningService "
+                "itself when providing one")
         self._service = service
         self._budget_bytes = budget_bytes
         self._shard_planes = shard_planes
+        self._tree_fanout = tree_fanout
         self.techniques: List[Technique] = [
             FilterTechnique(), LimitTechnique(),
             JoinTechnique(), TopKTechnique(),
@@ -582,7 +589,8 @@ class PruningPipeline:
             from ..serve.prune_service import PruningService
             self._service = PruningService(
                 budget_bytes=self._budget_bytes,
-                shard_mesh=True if self._shard_planes else None)
+                shard_mesh=True if self._shard_planes else None,
+                tree_fanout=self._tree_fanout)
         return self._service
 
     # -- shape gates shared by executors -------------------------------------

@@ -44,7 +44,8 @@ try:
 except ImportError:              # pragma: no cover - very old jax
     shard_map = None
 
-from ..core.device_stats import (DeviceStats, cast_bounds_f32, cast_stats_f32,
+from ..core.device_stats import (TREE_MIN_GROUPS, DeviceStats,
+                                 cast_bounds_f32, cast_stats_f32,
                                  snap_bounds_integral)
 from ..core.metadata import PartitionStats
 from ..core.prune_join import BLOCK_WORDS
@@ -434,6 +435,324 @@ def prune_ranges_batched_host(
                 row, np.where(no, 0, np.where(full, 2, 1)).astype(np.int8))
         tv[qi] = row
     return tv
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (tree) pruning path: group pre-pass + gathered leaf eval
+# ---------------------------------------------------------------------------
+#
+# The flat batched path is linear in P — every query touches every
+# partition slot.  The tree path makes the device work proportional to
+# *survivors* instead, in three levels (core.device_stats stages the
+# aggregated planes; see its tree-geometry note):
+#
+#   0. host coarse: the [C, G2] root hulls (G2 <= 64) evaluate in numpy —
+#      this both restricts level 1 and *prices* the pre-pass before any
+#      launch.  Coarse survivors bound fine survivors from above (a dead
+#      root kills all its children), so a coarse density over the cutoff
+#      proves the fine pre-pass can't win and the flat launch runs with
+#      ZERO extra launches — the stale-selectivity guarantee.
+#   1. fine group pre-pass: the [C, G] group planes evaluate only at
+#      coarse-survivor children, per-query, via the gathered oracle.
+#   2. leaf: the flat [C, cap] planes evaluate only at surviving groups'
+#      member positions; verdicts scatter into the [Q, P] output.  Every
+#      unlisted live partition sits in a group whose hull missed the
+#      query, and group NO_MATCH implies member NO_MATCH, so the
+#      scattered rows are bit-identical to the flat evaluation.
+#
+# FULL is never decided above the leaves: sentinel members don't widen a
+# hull, so a hull inside [lo, hi] proves nothing about its members — the
+# pre-pass only ever decides NO_MATCH vs survive (over-approximation is
+# structural, exactly the Extensible-Data-Skipping safety argument).
+
+TREE_DENSE_CUTOFF = 0.5
+
+# What the most recent tree-path launch on THIS thread actually did
+# (path taken, group counts, survivor densities) — benches and parity
+# tests read it; thread-local like the shard note.
+_tree_note = threading.local()
+
+
+def last_tree_stats() -> dict:
+    return getattr(_tree_note, "d", {})
+
+
+def _note_tree(**kw) -> None:
+    _tree_note.d = dict(kw)
+
+
+_gathered_ref_jit = jax.jit(ref.minmax_prune_gathered_ref)
+
+
+def _coarse_survivors(cids, lo, hi, cmins, cmaxs) -> np.ndarray:
+    """surv [Q, G2] bool — host evaluation of the coarse root level.
+
+    Mirrors the NO_MATCH term of the batched oracle (empty-hull and
+    range-miss tests); padding no-op slots keep everything."""
+    surv = np.ones((cids.shape[0], cmins.shape[1]), dtype=bool)
+    for k in range(cids.shape[1]):
+        pm = cmins[cids[:, k]]                        # [Q, G2]
+        px = cmaxs[cids[:, k]]
+        lo_k = lo[:, k][:, None]
+        hi_k = hi[:, k][:, None]
+        noop = (lo_k == -np.inf) & (hi_k == np.inf)
+        no = ((pm > px) | (px < lo_k) | (pm > hi_k)) & ~noop
+        surv &= ~no
+    return surv
+
+
+def _survivor_positions(surv: np.ndarray, span: int) -> np.ndarray:
+    """pos [Q, Sb * span] int32 — each row's surviving ids expanded to
+    their ``span`` child positions (id * span + j), right-padded with id
+    0's children up to the pow-2 bucket Sb of the max per-row survivor
+    count (bounded jit shapes).  Padding is *exact*, not a sentinel: the
+    gathered evaluator computes the true verdict at every listed
+    position, and scattering a truthful verdict twice — or for a
+    non-surviving group, whose members are provably NO — changes
+    nothing."""
+    Q = surv.shape[0]
+    counts = surv.sum(axis=1)
+    sb = _pow2_at_least(max(int(counts.max()), 1))
+    ids = np.zeros((Q, sb), dtype=np.int64)
+    qs, gs = np.nonzero(surv)
+    col = np.arange(len(qs)) - np.repeat(np.cumsum(counts) - counts, counts)
+    ids[qs, col] = gs
+    pos = (ids[:, :, None] * span
+           + np.arange(span, dtype=np.int64)[None, None, :])
+    return pos.reshape(Q, sb * span).astype(np.int32)
+
+
+def prune_ranges_batched_tree(
+    range_lists: Sequence[List[Tuple[int, float, float]]],
+    dstats: DeviceStats,
+    tree_entry,                  # DeviceStatsCache.tree_plane(...) entry
+    mode: str = "auto",
+    mesh=None,
+    dense_cutoff: float = TREE_DENSE_CUTOFF,
+) -> np.ndarray:
+    """tv [Q, P] int8 via the hierarchical group pre-pass.
+
+    Bit-identical to ``prune_ranges_batched_device`` row for row (and so
+    to the f64 host oracle wherever the flat path is): the pre-pass only
+    removes positions whose group hull *proves* NO_MATCH.  Falls back to
+    the flat launch when the table is too small for the tree geometry or
+    the coarse survivor density exceeds ``dense_cutoff`` — the density
+    check runs on the host coarse level, so the dense-workload fallback
+    never pays a pre-pass launch.  The gathered evaluations use the jnp
+    oracle on every backend (XLA-native gathers; the Pallas kernel
+    remains the flat path's dense evaluator), and are unsharded — a mesh
+    is forwarded to the flat fallback only.
+    """
+    Q = len(range_lists)
+    planes, P = dstats.planes_state
+    mins, maxs, demote = planes
+    Pc = int(mins.shape[1])
+    gm, gx, gd = tree_entry.arrays[:3]
+    cmins, cmaxs = (np.asarray(a) for a in tree_entry.arrays[3:])
+    fanout = int(tree_entry.meta["fanout"])
+    G = int(gm.shape[1])
+    if Q == 0 or Pc != G * fanout or P < fanout * TREE_MIN_GROUPS:
+        _note_tree(path="flat_small", groups=G)
+        return prune_ranges_batched_device(range_lists, dstats, mode,
+                                           mesh=mesh)
+    cids, lo, hi, full_safe = pack_ranges(range_lists, dstats)
+    Qb = cids.shape[0]
+    # Level 0 — padding rows beyond Q are all-no-op and survive
+    # everything; the density must price only the real rows.
+    csurv = _coarse_survivors(cids[:Q], lo[:Q], hi[:Q], cmins, cmaxs)
+    G2 = csurv.shape[1]
+    cdens = csurv.sum(axis=1).max() / G2
+    if cdens > dense_cutoff:
+        _note_tree(path="flat_dense", groups=G, coarse_density=float(cdens))
+        return prune_ranges_batched_device(range_lists, dstats, mode,
+                                           mesh=mesh)
+    cids_d = jnp.asarray(cids)
+    lo_d = jnp.asarray(lo)
+    hi_d = jnp.asarray(hi)
+
+    def pad_rows(a):
+        return np.concatenate(
+            [a, np.zeros((Qb - Q, a.shape[1]), dtype=a.dtype)], axis=0)
+
+    # Level 1 — fine group pre-pass over coarse-survivor children only.
+    gpos = _survivor_positions(csurv, G // G2)            # [Q, S2b * f2]
+    tvg = np.asarray(_gathered_ref_jit(
+        cids_d, lo_d, hi_d, gm, gx, gd, jnp.asarray(pad_rows(gpos))))[:Q]
+    gsurv = np.zeros((Q, G), dtype=bool)
+    qrow = np.repeat(np.arange(Q), gpos.shape[1])
+    gsurv[qrow, gpos.reshape(-1)] = (tvg > 0).reshape(-1)
+    fdens = gsurv.sum(axis=1).max() / G
+    # Level 2 — gathered leaf evaluation over surviving groups' members,
+    # slabbed like the flat ref path (slab and W are both pow-2 multiples
+    # of fanout, so chunk widths repeat and recompiles stay bounded).
+    pos = _survivor_positions(gsurv, fanout)              # [Q, Sb * fanout]
+    W = pos.shape[1]
+    groups_per_slab = max(1, (_REF_SLAB_ELEMS // max(Qb, 1)) // fanout)
+    slab = fanout * (1 << (groups_per_slab.bit_length() - 1))
+    pos_d = jnp.asarray(pad_rows(pos))
+    if W <= slab:
+        tvl = np.asarray(_gathered_ref_jit(
+            cids_d, lo_d, hi_d, mins, maxs, demote, pos_d))[:Q]
+    else:
+        tvl = np.empty((Q, W), dtype=np.int32)
+        for s in range(0, W, slab):
+            e = min(s + slab, W)
+            tvl[:, s:e] = np.asarray(_gathered_ref_jit(
+                cids_d, lo_d, hi_d, mins, maxs, demote,
+                jax.lax.slice_in_dim(pos_d, s, e, axis=1)))[:Q]
+    _note_shards(1)
+    # Scatter — unlisted positions stay 0 (NO): every unlisted live
+    # partition sits in a pruned group, and group NO implies member NO.
+    tv = np.zeros((Q, P), dtype=np.int8)
+    ps = pos.reshape(-1)
+    live = ps < P                    # capacity-tail sentinel slots
+    qs = np.repeat(np.arange(Q), W)[live]
+    tv[qs, ps[live]] = tvl.reshape(-1)[live].astype(np.int8)
+    if not full_safe.all():
+        tv[~full_safe] = np.minimum(tv[~full_safe], 1)
+    _note_tree(path="tree", groups=G, coarse_density=float(cdens),
+               fine_density=float(fdens), leaf_cols=int(W))
+    return tv
+
+
+def join_overlap_batched_tree(
+    distinct_lists: Sequence[np.ndarray],
+    pmin: jnp.ndarray,
+    pmax: jnp.ndarray,
+    tree_entry,
+    key_ci: int,
+    mode: str = "auto",
+    part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+    mesh=None,
+    dense_cutoff: float = TREE_DENSE_CUTOFF,
+) -> np.ndarray:
+    """hit [Q, P] — group pre-pass wrapper over the batched join overlap.
+
+    The stat tree's ``key_ci`` row is a hull over the same widened f32
+    member intervals as the join-key plane (both derive from the same
+    ``round_down/round_up + clamp`` of the same f64 column stats), so a
+    distinct list that misses group g's hull misses every member: those
+    members' hits are provably 0 and drop out of the part-id restriction
+    handed to the flat evaluator.  Bit-identical either way; the kernel
+    path ignores part-id restrictions by design (dense resident
+    evaluation), so the win lands on the no-Pallas fallback.
+    """
+    Q = len(distinct_lists)
+    P = int(pmin.shape[0])
+    fanout = int(tree_entry.meta["fanout"])
+    G = int(tree_entry.meta["groups"])
+    if Q == 0 or P > G * fanout:
+        _note_tree(path="flat_small", groups=G)
+        return join_overlap_batched_device(distinct_lists, pmin, pmax, mode,
+                                           part_ids_lists, mesh)
+    hg_lo = np.asarray(tree_entry.arrays[0])[key_ci]      # [G] group hulls
+    hg_hi = np.asarray(tree_entry.arrays[1])[key_ci]
+    restricted = []
+    dens = 0.0
+    for qi, d in enumerate(distinct_lists):
+        d32 = np.asarray(d, dtype=np.float32)
+        # group g may hit iff some distinct key lands in its hull; an
+        # empty hull (all-sentinel group) brackets nothing.
+        ghit = (np.searchsorted(d32, hg_hi, side="right")
+                > np.searchsorted(d32, hg_lo, side="left"))
+        dens = max(dens, ghit.sum() / G)
+        ids = (np.arange(P) if part_ids_lists is None
+               else np.asarray(part_ids_lists[qi]))
+        restricted.append(ids[ghit[ids // fanout]])
+    if dens > dense_cutoff:
+        _note_tree(path="flat_dense", groups=G, fine_density=float(dens))
+        return join_overlap_batched_device(distinct_lists, pmin, pmax, mode,
+                                           part_ids_lists, mesh)
+    _note_tree(path="tree", groups=G, fine_density=float(dens))
+    return join_overlap_batched_device(distinct_lists, pmin, pmax, mode,
+                                       restricted, mesh)
+
+
+def bloom_probe_batched_tree(
+    blooms: Sequence,
+    pmin: jnp.ndarray,
+    width: jnp.ndarray,
+    wmax: int,
+    enum_limit: int,
+    tree_entry,
+    mode: str = "auto",
+    part_ids_lists: Optional[Sequence[np.ndarray]] = None,
+    mesh=None,
+) -> np.ndarray:
+    """hit [Q, P] — group pre-pass wrapper over the batched Bloom probe.
+
+    Bloom pruning only ever decides partitions that are *enumerable*
+    (0 < width <= enum_limit); everything else is an unconditional keep.
+    The group pre-pass aggregates enumerability over the width plane
+    (one host reshape over the resident view — no launch) and restricts
+    the part-id lists to members of groups with at least one enumerable
+    member.  The restriction covers every enumerable partition, so the
+    excluded rows are exactly the flat path's unconditional keeps —
+    bit-identical.
+    """
+    Q = len(blooms)
+    P = int(pmin.shape[0])
+    fanout = int(tree_entry.meta["fanout"])
+    G = int(tree_entry.meta["groups"])
+    w = np.asarray(width)
+    if Q == 0 or int(w.shape[0]) != G * fanout:
+        _note_tree(path="flat_small", groups=G)
+        return bloom_probe_batched_device(blooms, pmin, width, wmax,
+                                          enum_limit, mode, part_ids_lists,
+                                          mesh)
+    genum = ((w > 0) & (w <= enum_limit)).reshape(G, fanout).any(axis=1)
+    restricted = []
+    for qi in range(Q):
+        ids = (np.arange(P) if part_ids_lists is None
+               else np.asarray(part_ids_lists[qi]))
+        restricted.append(ids[genum[ids // fanout]])
+    _note_tree(path="tree", groups=G, fine_density=float(genum.mean()))
+    return bloom_probe_batched_device(blooms, pmin, width, wmax, enum_limit,
+                                      mode, restricted, mesh)
+
+
+def topk_init_batched_tree(
+    plane: jnp.ndarray,
+    mask: np.ndarray,
+    k: int,
+    tree_entry,
+    mode: str = "auto",
+    mesh=None,
+    dense_cutoff: float = TREE_DENSE_CUTOFF,
+) -> np.ndarray:
+    """heap [Q, k] — group-compacted wrapper over the batched top-k init.
+
+    The union of the candidate masks' groups names every plane row any
+    query can select from, so evaluating the compacted [S * fanout, K]
+    plane slice with compacted masks returns identical value multisets
+    (top-k is a pure selection; masked-out rows contribute nothing).
+    Dense unions fall back flat; the compacted capacity rarely divides a
+    plane mesh, so the compacted launch runs unsharded.
+    """
+    mask = np.asarray(mask)
+    Q = int(mask.shape[0])
+    fanout = int(tree_entry.meta["fanout"])
+    G = int(tree_entry.meta["groups"])
+    Pp = int(plane.shape[0])
+    if Q == 0 or Pp != G * fanout:
+        _note_tree(path="flat_small", groups=G)
+        return topk_init_batched_device(plane, mask, k, mode, mesh)
+    m = mask
+    if m.shape[1] < Pp:
+        m = np.pad(m, ((0, 0), (0, Pp - m.shape[1])))
+    gunion = m.reshape(Q, G, fanout).any(axis=(0, 2))      # [G]
+    dens = gunion.sum() / G
+    if dens > dense_cutoff:
+        _note_tree(path="flat_dense", groups=G, fine_density=float(dens))
+        return topk_init_batched_device(plane, mask, k, mode, mesh)
+    gids = np.nonzero(gunion)[0]
+    _note_tree(path="tree", groups=G, fine_density=float(dens))
+    if not gids.size:
+        return np.full((Q, k), -np.inf, dtype=np.float32)
+    pos = (gids[:, None] * fanout
+           + np.arange(fanout)[None, :]).reshape(-1).astype(np.int32)
+    cplane = jnp.take(plane, jnp.asarray(pos), axis=0)
+    return topk_init_batched_device(cplane, m[:, pos], k, mode, mesh)
 
 
 # ---------------------------------------------------------------------------

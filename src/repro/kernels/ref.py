@@ -49,6 +49,41 @@ def minmax_prune_batched_ref(cids, lo, hi, mins, maxs, demote) -> jax.Array:
     return tv
 
 
+def minmax_prune_gathered_ref(cids, lo, hi, mins, maxs, demote, pos
+                              ) -> jax.Array:
+    """tv [Q, W] int32 over per-query *gathered* plane positions.
+
+    The tree path's survivor-restricted evaluator: column w of row q is
+    plane position ``pos[q, w]`` (an index into the flattened partition
+    dim — used both for the fine group planes and the leaf planes), so
+    entry (q, w) equals ``minmax_prune_batched_ref(...)[q, pos[q, w]]``
+    bit-for-bit — the gather commutes with every elementwise step of the
+    tri-valued conjunction.  Duplicate or padding positions simply
+    recompute the same truthful verdict.
+    """
+    Q, Kb = lo.shape
+    stride = mins.shape[1]
+    fm = mins.reshape(-1)
+    fx = maxs.reshape(-1)
+    fd = demote.reshape(-1)
+    tv = jnp.full(pos.shape, 2, dtype=jnp.int32)
+    for k in range(Kb):
+        idx = cids[:, k][:, None] * stride + pos        # [Q, W] flat index
+        pmin = jnp.take(fm, idx)
+        pmax = jnp.take(fx, idx)
+        pdem = jnp.take(fd, idx)
+        lo_k = lo[:, k][:, None]
+        hi_k = hi[:, k][:, None]
+        empty = pmin > pmax
+        no = (pmax < lo_k) | (pmin > hi_k) | empty
+        full = (pmin >= lo_k) & (pmax <= hi_k) & (pdem == 0.0) & ~empty
+        tv_k = jnp.where(no, 0, jnp.where(full, 2, 1)).astype(jnp.int32)
+        noop = (lo_k == -jnp.inf) & (hi_k == jnp.inf)
+        tv_k = jnp.where(noop, 2, tv_k)
+        tv = jnp.minimum(tv, tv_k)
+    return tv
+
+
 def topk_boundary_ref(rows: jax.Array, b_init) -> tuple:
     """(skip [P] int32, heap [k]) — sequential lax.scan with jnp.sort."""
     P, k = rows.shape

@@ -72,8 +72,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import expr as E
-from ..core.device_stats import (DeviceStatsCache, PlaneEpoch,
-                                 PlaneMemoryManager)
+from ..core.device_stats import (TREE_MIN_GROUPS, DeviceStatsCache,
+                                 PlaneEpoch, PlaneMemoryManager)
 from ..core.metadata import (FULL_MATCH, NO_MATCH, PARTIAL_MATCH, ScanSet,
                              live_full_scan, mask_dead_partitions)
 from ..core.predicate_cache import TableVersion
@@ -98,24 +98,27 @@ class ServiceCounters:
     launches: int = 0          # batched kernel launches, all techniques
     host_fallbacks: int = 0    # host fallbacks, all techniques
     sharded_launches: int = 0  # launches that ran partition-sharded
+    tree_launches: int = 0     # launches that ran the hierarchical path
     # per-technique attribution: {'filter': {'launches': n, 'fallbacks': m}}
     technique: Dict[str, Dict[str, int]] = dataclasses.field(
         default_factory=dict)
 
     def bump(self, tech: str, launches: int = 0, fallbacks: int = 0,
-             sharded: int = 0) -> None:
+             sharded: int = 0, tree: int = 0) -> None:
         t = self.technique.setdefault(tech, dict(launches=0, fallbacks=0))
         t["launches"] += launches
         t["fallbacks"] += fallbacks
         self.launches += launches
         self.host_fallbacks += fallbacks
         self.sharded_launches += sharded
+        self.tree_launches += tree
 
     def snapshot(self) -> dict:
         return dict(queries=self.queries, scans=self.scans,
                     launches=self.launches,
                     host_fallbacks=self.host_fallbacks,
                     sharded_launches=self.sharded_launches,
+                    tree_launches=self.tree_launches,
                     technique={k: dict(v) for k, v in self.technique.items()})
 
     @staticmethod
@@ -123,7 +126,7 @@ class ServiceCounters:
         """after - before of two snapshots: the activity in between."""
         out = {k: after[k] - before[k]
                for k in ("queries", "scans", "launches", "host_fallbacks",
-                         "sharded_launches")}
+                         "sharded_launches", "tree_launches")}
         zero = dict(launches=0, fallbacks=0)
         out["technique"] = {
             t: {f: v - before["technique"].get(t, zero)[f]
@@ -154,13 +157,23 @@ class PruningService:
                                        # schedule: every n-th read (1 =
                                        # every read; None keeps the
                                        # cache's default)
+        tree_fanout: Optional[int] = None,  # hierarchical-plane group size
+                                       # (None keeps the cache's default;
+                                       # tests shrink it so small tables
+                                       # exercise the tree rungs)
     ):
         self.mode = mode
         if cache is None:
             cache = DeviceStatsCache(
                 budget_bytes=budget_bytes, fault_injector=fault_injector,
                 **({} if integrity_sample is None
-                   else dict(integrity_sample=integrity_sample)))
+                   else dict(integrity_sample=integrity_sample)),
+                **({} if tree_fanout is None
+                   else dict(tree_fanout=tree_fanout)))
+        elif tree_fanout is not None and cache.tree_fanout != tree_fanout:
+            # safe on a shared cache: the tree getter's geometry check
+            # rebuilds any entry staged under the old fanout
+            cache.tree_fanout = int(tree_fanout)
         else:
             # adopt the chaos/integrity configuration onto a shared cache
             # only where it has none of its own (mirrors the budget rule)
@@ -188,8 +201,10 @@ class PruningService:
         self.versions: Dict[str, TableVersion] = {}
         self.counters = ServiceCounters()
         # The resilience layer: every batched launch executes through the
-        # degradation ladder (sharded -> device -> host kernel -> host
-        # oracle -> passthrough), so a kernel failure, a torn plane, or a
+        # degradation ladder (sharded tree -> tree -> sharded -> device ->
+        # host kernel -> host oracle -> passthrough; tree rungs only for
+        # tables large enough to carry a resident group plane), so a
+        # kernel failure, a torn plane, or a
         # deadline costs pruning quality, never correctness and never an
         # exception out of run_batch.  The counters dict is shared with
         # the ladder so demotions/retries surface per batch under
@@ -287,11 +302,29 @@ class PruningService:
         return ScanSet(ss.part_ids,
                        np.full(len(ss), PARTIAL_MATCH, dtype=np.int8))
 
-    def _device_rungs(self, tech: str, launch_fn) -> list:
-        """The device rungs of a ladder chain: sharded (only with a
-        mesh), then unsharded.  ``launch_fn(mesh, rung_site)`` builds the
-        thunk."""
+    def _tree_eligible(self, table) -> bool:
+        """Should this table's launches enter at the tree rungs?
+
+        Below ``tree_fanout * TREE_MIN_GROUPS`` partitions the flat
+        launch always wins (and small-table suites keep their byte-exact
+        staging accounting: no tree plane is ever staged for them)."""
+        return (table.stats.num_partitions
+                >= self.cache.tree_fanout * TREE_MIN_GROUPS)
+
+    def _device_rungs(self, tech: str, launch_fn, table=None) -> list:
+        """The device rungs of a ladder chain: tree rungs first when the
+        table is large enough to carry a resident group plane (sharded
+        tree only with a mesh), then the flat sharded/unsharded rungs.
+        ``launch_fn(mesh, rung_site, tree=False)`` builds the thunk; a
+        tree-plane fault (staging failure, torn plane) demotes to the
+        flat rungs, which never consult the tree family."""
         rungs = []
+        if table is not None and self._tree_eligible(table):
+            if self.shard_mesh is not None:
+                rungs.append(("sharded_tree", launch_fn(
+                    self.shard_mesh, f"launch.{tech}:sharded_tree", True)))
+            rungs.append(("tree",
+                          launch_fn(None, f"launch.{tech}:tree", True)))
         if self.shard_mesh is not None:
             rungs.append(("sharded",
                           launch_fn(self.shard_mesh, f"launch.{tech}:sharded")))
@@ -299,17 +332,19 @@ class PruningService:
         return rungs
 
     def _filter_rungs(self, table, range_lists, preds) -> list:
-        """The filter stage's full five-rung chain for one table group.
+        """The filter stage's full rung chain for one table group.
 
         Every rung returns the same contract: tv ``[Q, P]`` int8 rows
         (None from the passthrough rung — the caller keeps every live
-        partition as PARTIAL).  The host kernel is exact f64 over the
-        same lowered ranges; the host oracle re-evaluates each predicate
-        tree — both bit-identical to ``eval_tv`` for lowerable
-        predicates, so stopping at either rung costs latency, not
-        pruning quality.
+        partition as PARTIAL).  The tree rungs run the hierarchical
+        group pre-pass (bit-identical by the hull argument in
+        ``kops.prune_ranges_batched_tree``); the host kernel is exact
+        f64 over the same lowered ranges; the host oracle re-evaluates
+        each predicate tree — both bit-identical to ``eval_tv`` for
+        lowerable predicates, so stopping at any rung costs latency,
+        not pruning quality.
         """
-        def launch(mesh, site):
+        def launch(mesh, site, tree=False):
             def thunk():
                 self._fire(site)
                 # Pin scope: the planes this launch gathers from must not
@@ -318,10 +353,16 @@ class PruningService:
                 with self.cache.pin_scope():
                     dstats = self.cache.get(table,
                                             self.versions.get(table.name))
-                    tv = kops.prune_ranges_batched_device(
-                        range_lists, dstats, self.mode, mesh=mesh)
+                    if tree:
+                        te = self.cache.tree_plane(table, dstats)
+                        tv = kops.prune_ranges_batched_tree(
+                            range_lists, dstats, te, self.mode, mesh=mesh)
+                    else:
+                        tv = kops.prune_ranges_batched_device(
+                            range_lists, dstats, self.mode, mesh=mesh)
                     self.counters.bump("filter", launches=1,
-                                       sharded=self._sharded())
+                                       sharded=self._sharded(),
+                                       tree=1 if tree else 0)
                 return tv
             return thunk
 
@@ -338,7 +379,7 @@ class PruningService:
             self.counters.bump("filter", fallbacks=1)
             return tv
 
-        return self._device_rungs("filter", launch) + [
+        return self._device_rungs("filter", launch, table=table) + [
             ("host_kernel", host_kernel),
             ("host_oracle", host_oracle),
             ("passthrough", lambda: None),
@@ -470,16 +511,27 @@ class PruningService:
         (``prune_probe`` recomputes the overlap from host truth, so a
         degraded join loses latency, never pruning quality).
         """
-        def launch(mesh, site):
+        def launch(mesh, site, tree=False):
             def thunk():
                 self._fire(site)
                 with self.cache.pin_scope():
                     pmin, pmax = self.cache.join_key_plane(table, key_col)
-                    hit = kops.join_overlap_batched_device(
-                        [s.distinct for s in summaries], pmin, pmax,
-                        self.mode, part_ids_lists=part_ids, mesh=mesh)
+                    dist = [s.distinct for s in summaries]
+                    if tree:
+                        dstats = self.cache.get(table,
+                                                self.versions.get(table.name))
+                        te = self.cache.tree_plane(table, dstats)
+                        hit = kops.join_overlap_batched_tree(
+                            dist, pmin, pmax, te,
+                            table.stats.col_id(key_col), self.mode,
+                            part_ids_lists=part_ids, mesh=mesh)
+                    else:
+                        hit = kops.join_overlap_batched_device(
+                            dist, pmin, pmax, self.mode,
+                            part_ids_lists=part_ids, mesh=mesh)
                     self.counters.bump("join", launches=1,
-                                       sharded=self._sharded())
+                                       sharded=self._sharded(),
+                                       tree=1 if tree else 0)
                 return hit
             return thunk
 
@@ -488,7 +540,7 @@ class PruningService:
             return None
 
         hit, _rung = self.ladder.execute(
-            self._device_rungs("join", launch)
+            self._device_rungs("join", launch, table=table)
             + [("host_oracle", host_oracle)])
         return hit
 
@@ -502,18 +554,27 @@ class PruningService:
         enumeration plane (``part_ids`` restricts the no-Pallas fallback
         to each query's scan set, like ``join_hit_batch``).  None when
         the ladder degraded to the exact host matcher."""
-        def launch(mesh, site):
+        def launch(mesh, site, tree=False):
             def thunk():
                 self._fire(site)
                 with self.cache.pin_scope():
                     pmin, width, wmax, _domain_ok = self.cache.enum_plane(
                         table, key_col)
-                    hit = kops.bloom_probe_batched_device(
-                        [s.bloom for s in summaries], pmin, width, wmax,
-                        enum_limit, self.mode, part_ids_lists=part_ids,
-                        mesh=mesh)
+                    blooms = [s.bloom for s in summaries]
+                    if tree:
+                        dstats = self.cache.get(table,
+                                                self.versions.get(table.name))
+                        te = self.cache.tree_plane(table, dstats)
+                        hit = kops.bloom_probe_batched_tree(
+                            blooms, pmin, width, wmax, enum_limit, te,
+                            self.mode, part_ids_lists=part_ids, mesh=mesh)
+                    else:
+                        hit = kops.bloom_probe_batched_device(
+                            blooms, pmin, width, wmax, enum_limit,
+                            self.mode, part_ids_lists=part_ids, mesh=mesh)
                     self.counters.bump("join_bloom", launches=1,
-                                       sharded=self._sharded())
+                                       sharded=self._sharded(),
+                                       tree=1 if tree else 0)
                 return hit
             return thunk
 
@@ -522,7 +583,7 @@ class PruningService:
             return None
 
         hit, _rung = self.ladder.execute(
-            self._device_rungs("join_bloom", launch)
+            self._device_rungs("join_bloom", launch, table=table)
             + [("host_oracle", host_oracle)])
         return hit
 
@@ -585,16 +646,24 @@ class PruningService:
             return out                     # nothing to bound; skip the launch
         kb = kops.k_bucket(max(k for _, _, k in live))
 
-        def launch(mesh, site):
+        def launch(mesh, site, tree=False):
             def thunk():
                 self._fire(site)
                 with self.cache.pin_scope():
                     plane = self.cache.block_topk_plane(table, order_col,
                                                         desc)
-                    heap = kops.topk_init_batched_device(plane, masks, kb,
-                                                         self.mode, mesh=mesh)
+                    if tree:
+                        dstats = self.cache.get(table,
+                                                self.versions.get(table.name))
+                        te = self.cache.tree_plane(table, dstats)
+                        heap = kops.topk_init_batched_tree(
+                            plane, masks, kb, te, self.mode, mesh=mesh)
+                    else:
+                        heap = kops.topk_init_batched_device(
+                            plane, masks, kb, self.mode, mesh=mesh)
                     self.counters.bump("topk", launches=1,
-                                       sharded=self._sharded())
+                                       sharded=self._sharded(),
+                                       tree=1 if tree else 0)
                 return heap
             return thunk
 
@@ -605,7 +674,7 @@ class PruningService:
             return None
 
         heap, _rung = self.ladder.execute(
-            self._device_rungs("topk", launch)
+            self._device_rungs("topk", launch, table=table)
             + [("host_oracle", host_oracle)])
         if heap is None:
             return out

@@ -9,9 +9,11 @@ Skipping makes for its indexes: skipping metadata may only
 over-approximate).  This module turns that property into machinery:
 
   * ``DegradationLadder`` executes a per-table batched launch through an
-    ordered fallback chain (``RUNGS``): sharded device kernel ->
-    unsharded device kernel -> host kernel fallback (``kernels/ops.py``)
-    -> host oracle technique -> no-prune passthrough.  Each rung gets a
+    ordered fallback chain (``RUNGS``): sharded tree kernel (group
+    pre-pass over the hierarchical plane) -> tree kernel -> sharded flat
+    device kernel -> unsharded device kernel -> host kernel fallback
+    (``kernels/ops.py``) -> host oracle technique -> no-prune
+    passthrough.  Each rung gets a
     bounded number of retries with deterministic exponential backoff
     (injectable clock/sleep so tests never really sleep) and a per-stage
     deadline; every demotion is recorded in the service's
@@ -46,11 +48,17 @@ import numpy as np
 from ..core.device_stats import PlaneIntegrityError  # noqa: F401  re-export
 
 # The ordered fallback chain.  A launch enters at the highest rung its
-# configuration supports (sharded only when the service has a mesh) and
-# only ever moves down; the bottom rung keeps every live partition as
-# PARTIAL — a superset of any correct answer, never FULL (so LIMIT / the
-# top-k boundary initializers cannot trust uncertified rows).
-RUNGS = ("sharded", "device", "host_kernel", "host_oracle", "passthrough")
+# configuration supports (tree rungs only when the table is large enough
+# to carry a resident group plane, sharded only when the service has a
+# mesh) and only ever moves down; the bottom rung keeps every live
+# partition as PARTIAL — a superset of any correct answer, never FULL
+# (so LIMIT / the top-k boundary initializers cannot trust uncertified
+# rows).  The tree rungs run the hierarchical group pre-pass over the
+# ``[C, G]`` tree plane before touching leaves; a tree-plane fault
+# (integrity error, staging failure) demotes to the flat device rungs,
+# which never consult the tree family.
+RUNGS = ("sharded_tree", "tree", "sharded", "device", "host_kernel",
+         "host_oracle", "passthrough")
 
 
 def new_resilience_counters() -> dict:

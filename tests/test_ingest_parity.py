@@ -205,6 +205,104 @@ class TestRandomizedDMLParity:
                 assert fact.live_mask[rep.topk.scanned].all()
 
 
+class TestTreeDMLParity:
+    """ISSUE 7: the hierarchical tree planes through the same DML wringer.
+
+    A tree-rung service (fanout 4, so the ~20-partition fact table is
+    eligible) must stay bit-identical to (a) a fresh tree-plane restage,
+    (b) the flat device path (default fanout 256 keeps these tables
+    ineligible, so that service serves from the flat rungs), and (c) the
+    f64 host oracle — across every DML kind, with tree deltas replayed
+    in place rather than rebuilt.
+    """
+
+    @staticmethod
+    def _tree_tables(seed):
+        rng = np.random.default_rng(seed)
+        fact = Table.build("f", _rows(rng, 200), rows_per_partition=10,
+                           nulls={"v": rng.random(200) < 0.1})
+        dim = Table.build("d", {
+            "a": rng.integers(0, 100, 40).astype(np.int64),
+            "k": rng.integers(0, 60, 40).astype(np.int64),
+        }, rows_per_partition=8)
+        return fact, dim
+
+    @settings(max_examples=6, deadline=None)
+    @given(program=dml_programs())
+    def test_tree_dml_interleaved_queries(self, program):
+        seed, ops = program
+        rng = np.random.default_rng(seed)
+        fact, dim = self._tree_tables(seed)
+
+        tree_svc = PruningService(mode="ref", tree_fanout=4)
+        tree_pipe = PruningPipeline(filter_mode="device", service=tree_svc,
+                                    join_ndv_limit=NDV_LIMIT)
+        flat_svc = PruningService(mode="ref")
+        flat_pipe = PruningPipeline(filter_mode="device", service=flat_svc,
+                                    join_ndv_limit=NDV_LIMIT)
+        host_pipe = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+
+        for step, op in enumerate([("noop",)] + list(ops)):
+            if op[0] != "noop":
+                _apply_dml(fact, op, rng)
+            qs = _queries(fact, dim, rng)
+            tree_reports = tree_svc.run_batch(qs, tree_pipe)
+            fresh_svc = PruningService(mode="ref", tree_fanout=4)
+            fresh_pipe = PruningPipeline(filter_mode="device",
+                                         service=fresh_svc,
+                                         join_ndv_limit=NDV_LIMIT)
+            fresh_reports = fresh_svc.run_batch(qs, fresh_pipe)
+            flat_reports = flat_svc.run_batch(qs, flat_pipe)
+            host_reports = [host_pipe.run(q) for q in qs]
+            label = f"step {step} ({op[0]})"
+            _assert_reports_equal(qs, tree_reports, fresh_reports,
+                                  f"{label} tree-delta-vs-fresh-tree")
+            _assert_reports_equal(qs, tree_reports, flat_reports,
+                                  f"{label} tree-vs-flat")
+            _assert_reports_equal(qs, tree_reports, host_reports,
+                                  f"{label} tree-vs-host")
+        # the eligible fact table must actually have served tree rungs
+        assert tree_svc.counters.tree_launches > 0
+        assert flat_svc.counters.tree_launches == 0
+
+    def test_tree_plane_append_delta_replays_in_place(self):
+        """An in-capacity append re-aggregates only tail groups: the tree
+        plane delta-replays alongside the flat plane (no full restage)."""
+        rng = np.random.default_rng(11)
+        fact, dim = self._tree_tables(11)
+        svc = PruningService(mode="ref", tree_fanout=4)
+        pipe = PruningPipeline(filter_mode="device", service=svc)
+        qs = [Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)})]
+        svc.run_batch(qs, pipe)            # stages flat + tree planes
+        assert svc.cache.tree_planes
+        before = svc.cache.staging_snapshot()
+        fact.append_partitions(_rows(rng, 30), rows_per_partition=10)
+        svc.run_batch(qs, pipe)
+        after = svc.cache.staging_snapshot()
+        assert after["full_restages"] == before["full_restages"]
+        # one flat delta replay + one tree delta replay
+        assert after["delta_stages"] >= before["delta_stages"] + 2
+        host = PruningPipeline().run(qs[0])
+        got = svc.run_batch(qs, pipe)
+        _assert_reports_equal(qs, got, [host], "post-append tree-vs-host")
+
+    def test_tree_plane_rewrite_forces_tree_rebuild(self):
+        rng = np.random.default_rng(12)
+        fact, dim = self._tree_tables(12)
+        svc = PruningService(mode="ref", tree_fanout=4)
+        pipe = PruningPipeline(filter_mode="device", service=svc)
+        qs = [Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)})]
+        svc.run_batch(qs, pipe)
+        n = int(np.diff(fact.part_bounds)[3])
+        fact.rewrite_partitions([3], _rows(rng, n))
+        before_fulls = svc.cache.staging_snapshot()["full_restages"]
+        svc.run_batch(qs, pipe)
+        assert svc.cache.staging_snapshot()["full_restages"] > before_fulls
+        host = PruningPipeline().run(qs[0])
+        _assert_reports_equal(qs, svc.run_batch(qs, pipe), [host],
+                              "post-rewrite tree-vs-host")
+
+
 class TestDeltaStagingCounters:
     """The acceptance criterion: staging work proportional to the delta."""
 

@@ -28,7 +28,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.device_stats import _F32_MAX, DeviceStats
+from repro.core.device_stats import _F32_MAX, DeviceStats, tree_entry_for
 from repro.core.metadata import ColumnMeta, PartitionStats
 from repro.core.prune_join import BlockedBloom
 from repro.kernels import ops
@@ -286,3 +286,143 @@ class TestShardedBloomSentinels:
                 mode=mode, mesh=mesh)
             np.testing.assert_array_equal(hit, flat, err_msg=mode)
             assert (hit[:, sent] == 1).all(), mode
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (tree) plane path: sentinels at the GROUP level (ISSUE 7)
+# ---------------------------------------------------------------------------
+#
+# The group pre-pass aggregates member hulls; a sentinel member
+# (+f32max, -f32max) must never widen a hull, a fully-sentinel group's
+# empty hull must prune at the group level, and a group that mixes live
+# and sentinel members must survive whenever any live member can match.
+# Each test proves the tree path bit-identical to the (already
+# sentinel-proven) flat path on the same planes, with the pre-pass
+# actually engaged (path == 'tree', not a fallback).
+
+TREE_FANOUT = 4
+TREE_CAP = 64                      # 16 groups of 4; eligibility needs P>=16
+TREE_P = 56                        # live logical slots; 56..63 capacity tail
+# group 2 (slots 8..11) fully dropped; singles sit on group edges
+TREE_SENT = np.array([0, 8, 9, 10, 11, 19, 20, 34, 55])
+TREE_LIVE = np.array([i for i in range(TREE_P) if i not in TREE_SENT])
+
+
+def _tree_plane_fixture(seed=0, C=2):
+    """Clustered stats (sorted mins) so narrow ranges keep few groups."""
+    rng = np.random.default_rng(seed)
+    mins = np.sort(rng.uniform(-100, 100, TREE_P))
+    maxs = mins + rng.uniform(0, 4, TREE_P)
+    mins[TREE_SENT], maxs[TREE_SENT] = np.inf, -np.inf
+    d = DeviceStats.stage(_stats(mins, maxs, C=C), capacity=TREE_CAP)
+    return d, tree_entry_for(d, fanout=TREE_FANOUT), mins, maxs
+
+
+class TestTreeMinmaxSentinels:
+    def test_group_sentinels_bit_identical_to_flat(self):
+        d, tree, mins, _ = _tree_plane_fixture()
+        lo = float(np.float32(mins[TREE_LIVE[5]]))
+        range_lists = [
+            [(0, lo, lo + 10.0)],                    # narrow two-sided
+            [(1, 80.0, np.inf)],                     # one-sided tail
+            [(0, lo, lo), (1, -90.0, -70.0)],        # equality + conj
+            [(0, 200.0, 300.0)],                     # misses everything
+        ]
+        for mode in MODES:
+            flat = ops.prune_ranges_batched_device(range_lists, d, mode=mode)
+            tv = ops.prune_ranges_batched_tree(range_lists, d, tree,
+                                               mode=mode)
+            assert ops.last_tree_stats()["path"] == "tree", mode
+            np.testing.assert_array_equal(tv, flat, err_msg=mode)
+            assert (tv[:, TREE_SENT] == 0).all(), mode
+
+    def test_dense_fallback_is_bit_identical_too(self):
+        """A keep-most predicate must fall back flat (coarse density) and
+        still agree; the fully-sentinel group stays NO either way."""
+        d, tree, _, _ = _tree_plane_fixture(seed=1)
+        range_lists = [[(0, -200.0, 200.0)], [(1, -150.0, 150.0)]]
+        for mode in MODES:
+            flat = ops.prune_ranges_batched_device(range_lists, d, mode=mode)
+            tv = ops.prune_ranges_batched_tree(range_lists, d, tree,
+                                               mode=mode)
+            assert ops.last_tree_stats()["path"] == "flat_dense", mode
+            np.testing.assert_array_equal(tv, flat, err_msg=mode)
+            assert (tv[:, [8, 9, 10, 11]] == 0).all(), mode
+
+
+class TestTreeJoinSentinels:
+    def test_group_hull_restriction_matches_flat(self):
+        d, tree, mins, maxs = _tree_plane_fixture(seed=2)
+        # join-key plane: the same widened member intervals, sentinel rows
+        # the same empty interval — padded to the plane capacity
+        pmin = np.full(TREE_CAP, _F32_MAX, dtype=np.float32)
+        pmax = np.full(TREE_CAP, -_F32_MAX, dtype=np.float32)
+        pmin[TREE_LIVE] = mins[TREE_LIVE].astype(np.float32)
+        pmax[TREE_LIVE] = maxs[TREE_LIVE].astype(np.float32)
+        anchor = float(np.float32(mins[TREE_LIVE[8]]))
+        distinct = [
+            np.sort(np.array([anchor, anchor + 1.0], dtype=np.float32)),
+            np.array([_F32_MAX], dtype=np.float32),   # == sentinel pmin
+            np.array([-150.0], dtype=np.float32),     # below every hull
+        ]
+        for mode in MODES:
+            flat = ops.join_overlap_batched_device(
+                distinct, jnp.asarray(pmin), jnp.asarray(pmax), mode=mode)
+            hit = ops.join_overlap_batched_tree(
+                distinct, jnp.asarray(pmin), jnp.asarray(pmax), tree, 0,
+                mode=mode)
+            assert ops.last_tree_stats()["path"] == "tree", mode
+            np.testing.assert_array_equal(hit, flat, err_msg=mode)
+            assert (hit[:, TREE_SENT] == 0).all(), mode
+
+
+class TestTreeBloomSentinels:
+    def test_width_zero_groups_stay_unconditional_keeps(self):
+        d, tree, _, _ = _tree_plane_fixture(seed=3)
+        rng = np.random.default_rng(3)
+        pmin = np.zeros(TREE_CAP, dtype=np.int32)
+        width = np.zeros(TREE_CAP, dtype=np.int32)   # sentinel width 0
+        pmin[TREE_LIVE] = rng.integers(0, 500, TREE_LIVE.size)
+        width[TREE_LIVE] = rng.integers(1, 12, TREE_LIVE.size)
+        blooms = []
+        for _ in range(3):
+            b = BlockedBloom(64)
+            b.add(rng.integers(0, 500, 40))
+            blooms.append(b)
+        wmax = int(width.max())
+        for mode in MODES:
+            flat = ops.bloom_probe_batched_device(
+                blooms, jnp.asarray(pmin), jnp.asarray(width), wmax, 1024,
+                mode=mode)
+            hit = ops.bloom_probe_batched_tree(
+                blooms, jnp.asarray(pmin), jnp.asarray(width), wmax, 1024,
+                tree, mode=mode)
+            assert ops.last_tree_stats()["path"] == "tree", mode
+            np.testing.assert_array_equal(hit, flat, err_msg=mode)
+            # width-0 rows (group 2 is all of them) are unconditional keeps
+            assert (np.asarray(hit)[:, [8, 9, 10, 11]] == 1).all(), mode
+
+
+class TestTreeTopKSentinels:
+    def test_compacted_groups_match_flat_heap(self):
+        d, tree, _, _ = _tree_plane_fixture(seed=4)
+        rng = np.random.default_rng(4)
+        K, k = 8, 4
+        plane = np.full((TREE_CAP, K), -np.inf, dtype=np.float32)
+        plane[TREE_LIVE] = np.sort(
+            rng.uniform(-100, 100, (TREE_LIVE.size, K)).astype(np.float32),
+            axis=1)[:, ::-1]
+        # sparse masks (pre-pass engages) — one selects ONLY the dropped
+        # group, whose heap must come back empty, never -f32max garbage
+        mask = np.zeros((3, TREE_CAP), dtype=np.float32)
+        mask[0, [1, 2, 5, 6, 12, 13]] = 1.0          # two live groups
+        mask[1, [8, 9, 10, 11]] = 1.0                # dropped group only
+        mask[2, [7, 8]] = 1.0                        # straddles the edge
+        for mode in MODES:
+            flat = ops.topk_init_batched_device(
+                jnp.asarray(plane), mask, k, mode=mode)
+            heap = ops.topk_init_batched_tree(
+                jnp.asarray(plane), mask, k, tree, mode=mode)
+            assert ops.last_tree_stats()["path"] == "tree", mode
+            np.testing.assert_array_equal(heap, flat, err_msg=mode)
+            assert (np.asarray(heap)[1] == -np.inf).all(), mode
