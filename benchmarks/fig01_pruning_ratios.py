@@ -13,7 +13,6 @@ from repro.core.flow import PruningPipeline
 from .common import dist_stats, emit, timeit
 from .workload import (sample_filter_pred, sample_join_query,
                        sample_limit_query, sample_topk_query, tables)
-from repro.core import expr as E
 from repro.core.flow import Query, TableScanSpec
 
 

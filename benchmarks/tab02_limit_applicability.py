@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import expr as E
-from repro.core.flow import PruningPipeline, Query, TableScanSpec
+from repro.core.flow import PruningPipeline
 from repro.core.prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING,
                                     PRUNED_TO_0, PRUNED_TO_1, PRUNED_TO_N,
                                     UNSUPPORTED_SHAPE)

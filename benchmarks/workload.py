@@ -11,8 +11,6 @@ Calibrated to the paper's published workload statistics (DESIGN.md §7):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
 
 import numpy as np
 

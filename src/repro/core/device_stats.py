@@ -354,6 +354,13 @@ TREE_FANOUT = 256
 TREE_MIN_GROUPS = 4
 TREE_COARSE_MAX = 64
 
+# Registry of plane families under the integrity protocol.  Every family
+# in DeviceStatsCache._stores MUST be declared here and vice versa — the
+# contract linter (tools/contract_lint, rule CL002) enforces the parity,
+# so a new family (e.g. the ROADMAP's predicate/verdict cache) cannot
+# ship without joining checksum stamping and byte accounting.
+PLANE_FAMILIES = ("stat", "join_key", "enum", "block_topk", "tree_stat")
+
 
 def coarse_from_groups(gmins, gmaxs) -> Tuple[np.ndarray, np.ndarray]:
     """Host [C, G2] root hull of the [C, G] group planes (G2 <= 64)."""
@@ -726,21 +733,21 @@ class DeviceStatsCache:
         # divides a table's capacity exactly.
         self.tree_fanout = int(tree_fanout)
         # (name, uid) -> DeviceStats ([C, cap] planes + epoch)
-        self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()
+        self.entries: "OrderedDict[Tuple, DeviceStats]" = OrderedDict()  # guarded-by: _lock
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         # (name, uid, col) -> _PlaneEntry((pmin, pmax) [cap] f32 rows)
-        self.key_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        self.key_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
         # (name, uid, col) -> _PlaneEntry((pmin, width) [cap] i32 rows,
         #                                 meta: wmax, domain_ok)
-        self.enum_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        self.enum_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
         # (name, uid, col, desc, k) -> _PlaneEntry(([cap, k] signed rows,))
-        self.topk_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        self.topk_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
         # (name, uid) -> _PlaneEntry((gmins, gmaxs, gdem) [C, G] device
         # group hulls + (cmins, cmaxs) host coarse root — all five arrays
         # under one CRC stamp; meta: fanout, cap, groups)
-        self.tree_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()
+        self.tree_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
         self.max_planes = max_planes
         self.plane_hits = 0
         self.plane_misses = 0
@@ -779,9 +786,9 @@ class DeviceStatsCache:
         # attribute load per site, nothing else.
         self.fault_injector = fault_injector
         self.integrity_sample = int(integrity_sample)
-        self._integrity_tick = 0
-        self._quarantined: set = set()
-        self.integrity = dict(verifications=0, checksum_failures=0,
+        self._integrity_tick = 0        # guarded-by: _lock
+        self._quarantined: set = set()  # guarded-by: _lock
+        self.integrity = dict(verifications=0, checksum_failures=0,  # guarded-by: _lock
                               quarantines=0)
 
     # ---- memory-manager plumbing ---------------------------------------
@@ -827,7 +834,8 @@ class DeviceStatsCache:
         self._quarantined.add((family, key))
 
     def integrity_snapshot(self) -> dict:
-        return dict(self.integrity)
+        with self._lock:
+            return dict(self.integrity)
 
     def _pin_frames(self):
         frames = getattr(self._pin_local, "frames", None)
@@ -923,8 +931,9 @@ class DeviceStatsCache:
 
     def plane_epoch(self, table) -> Optional[PlaneEpoch]:
         """The resident [C, cap] plane's epoch for this table, if staged."""
-        e = self.entries.get((table.name, table.stats.uid))
-        return e.epoch if e is not None else None
+        with self._lock:
+            e = self.entries.get((table.name, table.stats.uid))
+            return e.epoch if e is not None else None
 
     # ---- [C, cap] stat planes ------------------------------------------
 

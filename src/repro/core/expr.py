@@ -12,7 +12,7 @@ produce three-valued match results (prune_filter.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, Sequence, Tuple, Union
 
 
 class Expr:

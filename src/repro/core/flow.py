@@ -47,8 +47,7 @@ from .metadata import (NO_MATCH, PARTIAL_MATCH, ScanSet, live_full_scan,
                        mask_dead_partitions, pruning_ratio)
 from .prune_filter import eval_tv
 from .prune_join import BuildSummary, prune_probe, summarize_build
-from .prune_limit import (ALREADY_MINIMAL, NO_FULLY_MATCHING, UNSUPPORTED_SHAPE,
-                          limit_prune)
+from .prune_limit import limit_prune
 from .prune_topk import TopKResult, run_topk
 from .prune_tree import AdaptivePruner
 from .rowval import matches

@@ -34,7 +34,7 @@ from typing import Optional
 
 import numpy as np
 
-from .metadata import NO_MATCH, PartitionStats, ScanSet
+from .metadata import PartitionStats, ScanSet
 
 BLOCK_WORDS = 16          # 16 x 32-bit words = 512-bit blocks
 K_PROBES = 4

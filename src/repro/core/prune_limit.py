@@ -14,7 +14,6 @@ the default counts partition rows (SELECT * semantics, as in the paper).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

@@ -23,7 +23,7 @@ depends on how data is distributed", Sec. 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 

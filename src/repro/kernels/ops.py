@@ -46,6 +46,7 @@ except ImportError:              # pragma: no cover - very old jax
 
 from ..core.device_stats import (TREE_MIN_GROUPS, DeviceStats,
                                  cast_bounds_f32, cast_stats_f32,
+                                 round_down_f32, round_up_f32,
                                  snap_bounds_integral)
 from ..core.metadata import PartitionStats
 from ..core.prune_join import BLOCK_WORDS
@@ -331,8 +332,8 @@ def pack_ranges(
     lo32, hi32, exact = cast_bounds_f32(lo64, hi64)
     # cast_bounds_f32 clamps to finite f32; re-impose the (-inf, +inf)
     # sentinel on padding slots so the kernel's no-op detection fires.
-    lo32 = np.where(valid, lo32, np.float32(-np.inf)).astype(np.float32)
-    hi32 = np.where(valid, hi32, np.float32(np.inf)).astype(np.float32)
+    lo32 = np.where(valid, lo32, np.float32(-np.inf))
+    hi32 = np.where(valid, hi32, np.float32(np.inf))
     full_safe = (exact | ~valid).all(axis=1)[:Q]
     return cids, lo32, hi32, full_safe
 
@@ -785,7 +786,9 @@ def build_block_topk(
     # Clamp like the slice values[s:e] would: bounds may overrun values.
     cb = np.clip(part_bounds, 0, len(values))
     lo_row, hi_row = int(cb[0]), int(cb[-1])
-    vals = values[lo_row:hi_row].astype(np.float32, copy=False)
+    # Widen, don't round-to-nearest: a plane value must never understate
+    # the block's potential, or the boundary test could skip a match.
+    vals = round_up_f32(values[lo_row:hi_row])
     pid = np.repeat(np.arange(P), np.diff(cb))
     if mask is not None:
         sel = np.asarray(mask, dtype=bool)[lo_row:hi_row]
@@ -819,7 +822,10 @@ def topk_boundary_device(
     elif mode == "prefix":
         skip, heap = ref.topk_boundary_prefix_ref(rows_j, b_init)
     else:
-        skip, heap = topk_boundary(rows_j, jnp.float32(b_init),
+        # round the upfront boundary down so a narrowed b_init can never
+        # skip a block the f64 boundary would have kept
+        b32 = jnp.asarray(round_down_f32(b_init))
+        skip, heap = topk_boundary(rows_j, b32,
                                    interpret=(mode == "interpret") or not _on_tpu())
     return np.asarray(skip), np.asarray(heap)
 
@@ -831,8 +837,8 @@ def join_overlap_device(
     mode: str = "auto",
 ) -> np.ndarray:
     """hit [P] int32: 1 where a build key may live in the partition."""
-    pmin = jnp.asarray(stats.col_min(key_col).astype(np.float32))
-    pmax = jnp.asarray(stats.col_max(key_col).astype(np.float32))
+    pmin = jnp.asarray(round_down_f32(stats.col_min(key_col)))
+    pmax = jnp.asarray(round_up_f32(stats.col_max(key_col)))
     d = jnp.asarray(np.asarray(distinct, dtype=np.float32))
     if mode == "ref" or (mode == "auto" and not _on_tpu()):
         hit = ref.join_overlap_ref(pmin, pmax, d)

@@ -153,8 +153,6 @@ def analytic_hbm_bytes(cfg, shape, chips: int) -> float:
     Per-device weight traffic never drops below the full shard (weights
     are read wherever they live); activation traffic scales with tokens.
     """
-    import numpy as np
-
     B, S = shape.global_batch, shape.seq_len
     p_bytes = cfg.param_count() * 2.0
     opt_bytes = cfg.param_count() * (4.0 if cfg.optimizer_state_dtype ==

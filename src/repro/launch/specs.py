@@ -17,7 +17,7 @@ Sharding policy (DESIGN.md §4):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -30,13 +29,12 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig
 from repro.core import expr as E
-from repro.data.pipeline import (CurationReport, PrunedDataLoader, curate,
+from repro.data.pipeline import (PrunedDataLoader, curate,
                                  make_corpus_metadata)
 from repro.models import build_model
-from repro.models.sharding import init_params
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamW, cosine_schedule
-from repro.train.train_step import TrainState, init_state, make_train_step
+from repro.train.train_step import init_state, make_train_step
 
 
 def default_config(vocab: int = 8192) -> ModelConfig:

@@ -17,14 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from . import layers as L
-from .mamba import (SSMState, mamba_block, mamba_decode_step, mamba_init_state,
+from .mamba import (SSMState, mamba_block, mamba_decode_step,
                     mamba_specs)
 from .moe import moe_block, moe_specs
 from .sharding import ParamSpec, constrain

@@ -16,7 +16,7 @@ request's K/V into its slot with a jitted writer.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

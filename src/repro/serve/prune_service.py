@@ -83,6 +83,19 @@ from ..kernels import ops as kops
 from .resilience import (DegradationLadder, new_resilience_counters,
                          resilience_delta, resilience_snapshot)
 
+# Registered DegradationLadder launch sites: the only methods allowed to
+# call ``kops.*_batched_*`` entrypoints.  Each builds a rung list that is
+# executed exclusively through ``self.ladder.execute`` — that is the PR 6
+# degradation contract, and the contract linter (tools/contract_lint,
+# rule CL001) flags any batched-kernel call outside these methods.  Add
+# a method here ONLY if its launches go through the ladder.
+LADDER_LAUNCH_SITES = frozenset({
+    "PruningService._filter_rungs",
+    "PruningService.join_hit_batch",
+    "PruningService.bloom_hit_batch",
+    "PruningService.topk_init_batch",
+})
+
 # Boundary-init k cap: the kernel's rank-selection merge is quadratic in
 # (k bucket + KPLANE), so the per-step comparison tensor must stay well
 # inside VMEM — at 128 it is [8, 192, 192] (~1.2MB).  Larger k also gains

@@ -41,7 +41,7 @@ from __future__ import annotations
 import dataclasses
 import random
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,25 @@ from ..core.device_stats import PlaneIntegrityError  # noqa: F401  re-export
 # which never consult the tree family.
 RUNGS = ("sharded_tree", "tree", "sharded", "device", "host_kernel",
          "host_oracle", "passthrough")
+
+# Single registry of every counter key the serving layer may write —
+# dict keys of the resilience / integrity counter stores, report-section
+# names assembled by PruningService.run_batch, and the per-technique
+# attribution families passed to ServiceCounters.bump().  The contract
+# linter (tools/contract_lint, rule CL006) rejects any counter write
+# whose key is not declared here, so a new counter cannot ship in a
+# shape fleet_summary() silently drops.
+COUNTER_REGISTRY = frozenset({
+    # resilience counters (new_resilience_counters / DegradationLadder)
+    "retries", "deadline_hits", "passthroughs", "errors",
+    "salvaged_batches", "demotions",
+    # plane-integrity counters (core.device_stats.DeviceStatsCache)
+    "verifications", "checksum_failures", "quarantines",
+    # per-technique attribution (ServiceCounters.bump / .technique)
+    "filter", "join", "join_bloom", "topk", "launches", "fallbacks",
+    # report sections attached to each batch (PruningService.run_batch)
+    "technique", "staging", "memory", "resilience", "integrity", "planes",
+})
 
 
 def new_resilience_counters() -> dict:

@@ -14,7 +14,6 @@ latency-hiding scheduler) — the compute/comm overlap trick at scale.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.configs.base import SHAPES, shape_supported
+from repro.configs.base import shape_supported
 from repro.models import build_model
 from repro.models.sharding import init_params
 

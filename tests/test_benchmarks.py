@@ -2,7 +2,6 @@
 headline quantities land in the paper's neighborhood."""
 
 import numpy as np
-import pytest
 
 
 class TestPaperFigures:

@@ -3,7 +3,6 @@ vs the f64 host oracle; DeviceStatsCache staging/invalidation; the f32
 precision contract; the vectorized block-topk staging."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -293,7 +292,6 @@ class TestDeviceStatsCache:
         """A rebuilt table (same name, same partition count, new data)
         must re-stage — a stale hit would false-NO_MATCH, losing rows
         (regression from review)."""
-        from repro.core.prune_filter import eval_tv
         rng = np.random.default_rng(0)
         t1 = Table.build("t", {"v": np.arange(100, dtype=np.int64)},
                          rows_per_partition=10)

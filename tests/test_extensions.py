@@ -2,13 +2,12 @@
 metadata + backfill (8.1), and the device-kernel flow path."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import expr as E
 from repro.core.flow import PruningPipeline, Query, TableScanSpec
-from repro.core.metadata import FULL_MATCH, NO_MATCH, ScanSet
+from repro.core.metadata import ScanSet
 from repro.core.predicate_cache import (PredicateCache, TableVersion,
                                         plan_key)
 from repro.core.prune_filter import eval_tv

@@ -2,7 +2,6 @@
 with hypothesis shape/dtype sweeps."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

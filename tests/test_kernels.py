@@ -12,7 +12,6 @@ from repro.core import expr as E
 from repro.core.metadata import ScanSet
 from repro.core.prune_filter import eval_ranges_tv, extract_ranges
 from repro.core.prune_topk import run_topk, topk_oracle
-from repro.data.table import Table
 from repro.kernels import join_overlap, minmax_prune, ops, ref, topk_boundary
 
 from helpers import small_tables

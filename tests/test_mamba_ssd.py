@@ -1,7 +1,6 @@
 """Mamba2 SSD correctness: the chunked dual form vs a naive recurrence
 oracle, and decode-state continuity after prefill."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

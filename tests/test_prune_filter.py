@@ -1,7 +1,6 @@
 """Filter pruning (paper Sec. 3): soundness, paper examples, fast path."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import expr as E

@@ -4,7 +4,6 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import expr as E
 from repro.core.metadata import NO_MATCH, ScanSet
 from repro.core.prune_filter import eval_tv
 from repro.core.prune_topk import (order_partitions, run_topk, topk_oracle,

@@ -2,7 +2,6 @@
 guiding IUCN example, with execution results proven unchanged by pruning."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

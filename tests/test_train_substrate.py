@@ -8,12 +8,10 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import expr as E
 from repro.data.pipeline import (PrunedDataLoader, WorkQueue, curate,
                                  make_corpus_metadata, shard_tokens)
-from repro.core.metadata import ScanSet
 from repro.models import build_model
 from repro.launch.train import default_config
 from repro.models.sharding import init_params
@@ -184,7 +182,9 @@ class TestElastic:
         code = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, numpy as np, jax.numpy as jnp
+import jax
+import numpy as np
+import jax.numpy as jnp
 from repro.launch.train import default_config
 import dataclasses
 from repro.models import build_model

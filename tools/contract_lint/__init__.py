@@ -1,0 +1,32 @@
+"""Contract linter: machine-checked enforcement of the repo's contracts.
+
+The engine's correctness rests on cross-cutting contracts that unit
+tests cannot see being *bypassed*:
+
+  * the PR 6 degradation contract — every batched launch enters through
+    ``DegradationLadder.execute`` and every plane family joins the
+    integrity protocol;
+  * the precision contract — every f64 -> f32 downcast of stats or query
+    bounds goes through the centralized widening helpers in
+    ``core/device_stats.py``;
+  * the lock discipline — ``DeviceStatsCache`` state is only touched
+    under ``self._lock``;
+  * trace safety — no host control flow on traced values, no
+    nondeterminism inside Pallas kernel bodies or jitted functions;
+  * counter registration — every counter key the service emits is
+    declared in one registry so ``fleet_summary()`` can never silently
+    drop a family.
+
+This package is a pure-``ast`` static-analysis pass (no jax import, no
+runtime import of the checked code) with a finding/baseline engine and a
+CLI::
+
+    python -m tools.contract_lint src/ --baseline tools/contract_lint/baseline.json
+
+See ``docs/CONTRACTS.md`` for the rule catalogue and
+``tools/contract_lint/README.md`` for invocation details.
+"""
+
+from .engine import (Baseline, Finding, LintConfig, lint_paths,  # noqa: F401
+                     lint_sources)
+from .checkers import ALL_CHECKERS  # noqa: F401

@@ -1,0 +1,116 @@
+"""CLI for the contract linter.
+
+Usage::
+
+    python -m tools.contract_lint src/ --baseline tools/contract_lint/baseline.json
+    python -m tools.contract_lint src/repro/serve --select CL001
+    python -m tools.contract_lint src/ --json findings.json   # CI artifact
+    python -m tools.contract_lint src/ --write-baseline tools/contract_lint/baseline.json
+
+Exit codes: 0 clean (or all findings baselined), 1 new findings (or a
+stale baseline entry with --strict-baseline), 2 usage/internal error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .checkers import ALL_CHECKERS
+from .engine import Baseline, LintConfig, lint_paths
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.contract_lint",
+        description="AST-based contract linter (ladder, integrity, lock, "
+                    "precision, trace-safety, counter contracts).")
+    parser.add_argument("paths", nargs="*", default=["src/"],
+                        help="files or directories to lint (default: src/)")
+    parser.add_argument("--baseline", metavar="JSON",
+                        help="accepted-findings baseline to filter against")
+    parser.add_argument("--write-baseline", metavar="JSON",
+                        help="write all current findings as a fresh baseline "
+                             "(justifications start as FIXME placeholders)")
+    parser.add_argument("--json", metavar="JSON", dest="json_out",
+                        help="write the full findings report as JSON "
+                             "(CI artifact)")
+    parser.add_argument("--select", action="append", default=None,
+                        metavar="RULE", help="run only these rule ids/names "
+                        "(repeatable)")
+    parser.add_argument("--strict-baseline", action="store_true",
+                        help="also fail on stale baseline entries")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalogue and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for c in ALL_CHECKERS:
+            doc = (c.__doc__ or "").strip().splitlines()[0]
+            print(f"{c.rule}  {c.name:22s} {doc}")
+        return 0
+
+    try:
+        findings = lint_paths(args.paths or ["src/"],
+                              LintConfig(select=args.select))
+    except SyntaxError as exc:
+        print(f"error: cannot parse {exc.filename}:{exc.lineno}: {exc.msg}",
+              file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        entries = Baseline.seed(findings)
+        Path(args.write_baseline).write_text(
+            json.dumps({"findings": entries}, indent=2) + "\n")
+        print(f"wrote {len(entries)} baseline entries to "
+              f"{args.write_baseline} (fill in the justifications)")
+        return 0
+
+    baseline = Baseline()
+    if args.baseline:
+        try:
+            baseline = Baseline.load(args.baseline)
+        except FileNotFoundError:
+            print(f"error: baseline {args.baseline} not found",
+                  file=sys.stderr)
+            return 2
+        except ValueError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+
+    new, accepted = baseline.split(findings)
+    stale = baseline.unused(findings)
+
+    if args.json_out:
+        report = {
+            "new": [f.to_json() for f in new],
+            "accepted": [f.to_json() for f in accepted],
+            "stale_baseline_entries": stale,
+        }
+        Path(args.json_out).write_text(json.dumps(report, indent=2) + "\n")
+
+    for f in new:
+        print(f.render())
+    if accepted:
+        print(f"({len(accepted)} baselined finding"
+              f"{'s' if len(accepted) != 1 else ''} suppressed)")
+    for e in stale:
+        print(f"warning: stale baseline entry {e.get('rule')} "
+              f"{e.get('path')} [{e.get('context')}] — no finding matches; "
+              f"prune it", file=sys.stderr)
+
+    if new:
+        print(f"\n{len(new)} new contract violation"
+              f"{'s' if len(new) != 1 else ''}.", file=sys.stderr)
+        return 1
+    if stale and args.strict_baseline:
+        return 1
+    print(f"contract lint clean: {len(findings)} finding(s), "
+          f"all baselined" if findings else "contract lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,301 @@
+"""Finding / baseline engine for the contract linter.
+
+Pure-stdlib (``ast`` + ``tokenize``): linting never imports the checked
+code, so the pass runs in CI images without jax and cannot be confused
+by import-time side effects.
+
+Data flow::
+
+    paths -> Project (parsed modules + comment maps)
+          -> checkers (tools.contract_lint.checkers.ALL_CHECKERS)
+          -> [Finding, ...]
+          -> Baseline filter (accepted pre-existing findings)
+          -> report + exit code
+
+Baseline entries are *line-number independent*: a finding is fingerprinted
+by (rule, path, enclosing qualname, stripped source line), so unrelated
+edits shifting a file never invalidate the baseline, while editing the
+flagged line itself resurfaces the finding for re-review.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation at a source location."""
+
+    rule: str          # stable rule id, e.g. "CL001"
+    name: str          # human slug, e.g. "ladder-discipline"
+    path: str          # posix relpath of the file
+    line: int
+    col: int
+    message: str
+    context: str = ""  # enclosing qualname ("Class.method" / "<module>")
+    snippet: str = ""  # stripped source line (baseline matching key)
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.context, self.snippet)
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}:{self.col}"
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"{where}: {self.rule}({self.name}){ctx} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Baseline:
+    """Accepted pre-existing findings, loaded from / saved to JSON.
+
+    Each entry carries the finding fingerprint plus a one-line
+    ``justification`` (required — an unexplained suppression is itself a
+    contract smell).  One entry suppresses every finding with the same
+    fingerprint (identical flagged lines in one scope are one decision).
+    """
+
+    def __init__(self, entries: Optional[List[dict]] = None):
+        self.entries = entries or []
+        self._index = {self._key(e) for e in self.entries}
+
+    @staticmethod
+    def _key(entry: dict) -> Tuple[str, str, str, str]:
+        return (entry.get("rule", ""), entry.get("path", ""),
+                entry.get("context", ""), entry.get("snippet", ""))
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        data = json.loads(Path(path).read_text())
+        entries = data["findings"] if isinstance(data, dict) else data
+        bad = [e for e in entries if not e.get("justification")]
+        if bad:
+            raise ValueError(
+                f"baseline entries without a justification: "
+                f"{[cls._key(e) for e in bad]}")
+        return cls(entries)
+
+    def matches(self, finding: Finding) -> bool:
+        return finding.fingerprint in self._index
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding]]:
+        """(new, accepted) partition of ``findings``."""
+        new, accepted = [], []
+        for f in findings:
+            (accepted if self.matches(f) else new).append(f)
+        return new, accepted
+
+    def unused(self, findings: Sequence[Finding]) -> List[dict]:
+        """Baseline entries no finding matched — stale, should be pruned."""
+        hit = {f.fingerprint for f in findings}
+        return [e for e in self.entries if self._key(e) not in hit]
+
+    @staticmethod
+    def seed(findings: Sequence[Finding],
+             justification: str = "FIXME: justify or fix") -> List[dict]:
+        out, seen = [], set()
+        for f in findings:
+            if f.fingerprint in seen:
+                continue
+            seen.add(f.fingerprint)
+            out.append(dict(rule=f.rule, path=f.path, context=f.context,
+                            snippet=f.snippet, justification=justification))
+        return out
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file plus the comment map checkers consume."""
+
+    path: str                       # posix relpath
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    comments: Dict[int, str]        # line number -> comment text ("# ...")
+
+    def line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+def _comment_map(source: str) -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:     # pragma: no cover - truncated source
+        pass
+    return out
+
+
+class Project:
+    """The parsed file set one lint run operates on."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules = modules
+
+    @classmethod
+    def from_sources(cls, sources: Dict[str, str]) -> "Project":
+        mods = []
+        for path, src in sorted(sources.items()):
+            posix = Path(path).as_posix()
+            tree = ast.parse(src, filename=posix)
+            mods.append(ModuleInfo(posix, src, tree, src.splitlines(),
+                                   _comment_map(src)))
+        return cls(mods)
+
+    def by_suffix(self, suffix: str) -> List[ModuleInfo]:
+        return [m for m in self.modules if m.path.endswith(suffix)]
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by every checker)
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def qualnames(tree: ast.Module) -> Dict[ast.AST, str]:
+    """Map every function/class node to its dotted qualname."""
+    out: Dict[ast.AST, str] = {}
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = q
+                walk(child, q)
+            else:
+                walk(child, prefix)
+
+    walk(tree, "")
+    return out
+
+
+def enclosing_scopes(tree: ast.Module) -> Dict[ast.AST, List[ast.AST]]:
+    """Map every node to its stack of enclosing function/class defs."""
+    out: Dict[ast.AST, List[ast.AST]] = {}
+
+    def walk(node: ast.AST, stack: List[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            out[child] = stack
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                walk(child, stack + [child])
+            else:
+                walk(child, stack)
+
+    walk(tree, [])
+    return out
+
+
+def string_elements(node: ast.AST) -> List[str]:
+    """String literals inside a tuple/list/set/frozenset(...) literal."""
+    if isinstance(node, ast.Call) and dotted_name(node.func) in (
+            "frozenset", "set", "tuple", "list"):
+        if node.args:
+            return string_elements(node.args[0])
+        return []
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def collect_registry(project: Project, var_name: str) -> Optional[set]:
+    """Union of string elements of every module-level ``var_name = {...}``
+    assignment across the project; None when no module declares it."""
+    found = None
+    for mod in project.modules:
+        for node in mod.tree.body:
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            else:
+                continue
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id == var_name:
+                    found = (found or set())
+                    found.update(string_elements(node.value))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def _iter_py_files(paths: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            files.append(path)
+    # de-dup while keeping order
+    seen, out = set(), []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+@dataclasses.dataclass
+class LintConfig:
+    select: Optional[Sequence[str]] = None     # rule ids/names to run
+    root: Optional[Path] = None                # relpath anchor (default cwd)
+
+
+def lint_sources(sources: Dict[str, str],
+                 config: Optional[LintConfig] = None) -> List[Finding]:
+    """Lint in-memory sources ({relpath: source}) — the test entry point."""
+    from .checkers import ALL_CHECKERS
+    config = config or LintConfig()
+    project = Project.from_sources(sources)
+    findings: List[Finding] = []
+    for checker in ALL_CHECKERS:
+        if config.select and checker.rule not in config.select \
+                and checker.name not in config.select:
+            continue
+        findings.extend(checker.run(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def lint_paths(paths: Sequence[str],
+               config: Optional[LintConfig] = None) -> List[Finding]:
+    config = config or LintConfig()
+    root = config.root or Path.cwd()
+    sources: Dict[str, str] = {}
+    for f in _iter_py_files(paths):
+        try:
+            rel = f.resolve().relative_to(Path(root).resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        sources[rel] = f.read_text()
+    return lint_sources(sources, config)
