@@ -52,7 +52,7 @@ from typing import Callable, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .metadata import PartitionStats
+from .metadata import NO_MATCH, PartitionStats
 from .predicate_cache import TableVersion
 
 
@@ -357,9 +357,11 @@ TREE_COARSE_MAX = 64
 # Registry of plane families under the integrity protocol.  Every family
 # in DeviceStatsCache._stores MUST be declared here and vice versa — the
 # contract linter (tools/contract_lint, rule CL002) enforces the parity,
-# so a new family (e.g. the ROADMAP's predicate/verdict cache) cannot
-# ship without joining checksum stamping and byte accounting.
-PLANE_FAMILIES = ("stat", "join_key", "enum", "block_topk", "tree_stat")
+# so a new family cannot ship without joining checksum stamping and byte
+# accounting.  ``verdict`` is the Sec. 8.2 predicate/verdict cache: one
+# int8 [cap] three-valued verdict row per (table, canonical predicate).
+PLANE_FAMILIES = ("stat", "join_key", "enum", "block_topk", "tree_stat",
+                  "verdict")
 
 
 def coarse_from_groups(gmins, gmaxs) -> Tuple[np.ndarray, np.ndarray]:
@@ -748,6 +750,10 @@ class DeviceStatsCache:
         # group hulls + (cmins, cmaxs) host coarse root — all five arrays
         # under one CRC stamp; meta: fanout, cap, groups)
         self.tree_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
+        # (name, uid, canonical predicate key) -> _PlaneEntry((verdicts,))
+        # — one int8 [cap] three-valued row; meta: cols (predicate's
+        # column reads, for UPDATE invalidation)
+        self.verdict_planes: "OrderedDict[Tuple, _PlaneEntry]" = OrderedDict()  # guarded-by: _lock
         self.max_planes = max_planes
         self.plane_hits = 0
         self.plane_misses = 0
@@ -764,7 +770,8 @@ class DeviceStatsCache:
         self._stores = {"stat": self.entries, "join_key": self.key_planes,
                         "enum": self.enum_planes,
                         "block_topk": self.topk_planes,
-                        "tree_stat": self.tree_planes}
+                        "tree_stat": self.tree_planes,
+                        "verdict": self.verdict_planes}
         self.memory.bind(self._evict_family)
         # Epoch check + plane read must be atomic per getter: under the
         # eviction path a concurrent version bump / invalidate between
@@ -789,7 +796,7 @@ class DeviceStatsCache:
         self._integrity_tick = 0        # guarded-by: _lock
         self._quarantined: set = set()  # guarded-by: _lock
         self.integrity = dict(verifications=0, checksum_failures=0,  # guarded-by: _lock
-                              quarantines=0)
+                              quarantines=0, verdict_repairs=0)
 
     # ---- memory-manager plumbing ---------------------------------------
 
@@ -1532,6 +1539,125 @@ class DeviceStatsCache:
             return self._plane_fresh("tree_stat", self.tree_planes, key,
                                      build)
 
+    # -- verdict planes (Sec. 8.2 predicate cache, device-resident) ------
+
+    def verdict_plane(self, table, pred, ckey: str) -> Optional[np.ndarray]:
+        """The cached int8 ``[P]`` verdict row for ``(table, predicate)``,
+        brought current — or None on miss (the caller launches the
+        ordinary kernel chain and ``verdict_record``s the result).
+
+        ``ckey`` is the canonical predicate key (``expr.canonical_key``),
+        so syntactic variants of one predicate share a row.  Full member
+        of the integrity protocol: CRC-stamped at record and after every
+        delta replay, sampled-verified on read (a torn row quarantines
+        and misses — never serves), force-verified on the restage,
+        ``PlaneIntegrityError`` on a second failure (the serving ladder
+        demotes to the kernel chain: cache-off is a demotion rung, not a
+        wrong answer).
+
+        Delta repair from the ``TableDelta`` log: appended partitions are
+        the only unknown slots — their verdicts are evaluated host-side
+        (f64 ``eval_tv`` over just the ``[part_lo, part_hi)`` stats
+        slice, exact, and bit-identical to the device kernels on the
+        int/dict exact-f32 domains the parity harness pins) and patched
+        in place, counted in ``integrity["verdict_repairs"]``; drops
+        scatter the NO_MATCH tombstone sentinel; an UPDATE touching any
+        column the predicate reads, a rewrite, a log gap, or capacity
+        overflow drops the entry (full miss).
+        """
+        from .prune_filter import eval_tv  # lazy: avoid import cycles
+        with self._lock:
+            self._fire("get.verdict")
+            key = (table.name, table.stats.uid, ckey)
+            e = self.verdict_planes.get(key)
+            if e is None:
+                return None
+            tver = self._table_version(table)
+            P = table.stats.num_partitions
+            served = False
+            if e.version == tver:
+                served = True
+            elif e.version < tver:
+                deltas = self._deltas_since(table, e.version)
+                if deltas is not None and P <= e.capacity:
+                    row = e.arrays[0]
+                    ok = True
+                    staged = False
+                    nbytes = 0
+                    for d in deltas:
+                        if d.kind == "append":
+                            sub = table.stats.select(
+                                np.arange(d.part_lo, d.part_hi))
+                            patch = eval_tv(pred, sub).astype(np.int8)
+                            row = row.at[d.part_lo:d.part_hi].set(
+                                jnp.asarray(patch))
+                            self.integrity["verdict_repairs"] += 1
+                            nbytes += d.part_hi - d.part_lo
+                            staged = True
+                        elif d.kind == "drop":
+                            ids = jnp.asarray(
+                                np.asarray(d.part_ids, dtype=np.int32))
+                            row = row.at[ids].set(np.int8(NO_MATCH))
+                            nbytes += len(d.part_ids)
+                            staged = True
+                        elif d.kind == "update" and \
+                                d.column not in e.meta["cols"]:
+                            continue
+                        else:       # rewrite / predicate-column update
+                            ok = False
+                            break
+                    if ok:
+                        e.arrays = (row,)
+                        e.version = tver
+                        e.logical_p = P
+                        self.staged_bytes += nbytes
+                        if staged:
+                            self.delta_stages += 1
+                            e.meta["checksum"] = plane_checksum(e.arrays)
+                            e.arrays = self._corrupt("stage.verdict",
+                                                     e.arrays)
+                        served = True
+            if served:
+                self.plane_hits += 1
+                self.verdict_planes.move_to_end(key)
+                self._touch("verdict", key)
+                if not self._verify_due() or self._verify(
+                        e.arrays, e.meta.get("checksum")):
+                    return np.asarray(e.arrays[0][:P], dtype=np.int8)
+                # torn verdict row: quarantine and miss — the relaunch's
+                # verdict_record force-verifies the restage
+                self._quarantine("verdict", key)
+                return None
+            del self.verdict_planes[key]
+            self.memory.release("verdict", key)
+            self.full_restages += 1
+            return None
+
+    def verdict_record(self, table, pred, ckey: str,
+                       tv_row: np.ndarray) -> None:
+        """Stage a freshly-computed verdict row as a resident plane.
+
+        ``tv_row`` is the int8 ``[P]`` three-valued result of a ladder
+        rung at or above ``host_oracle`` (exact rungs only — passthrough
+        verdicts are uncertified and never recorded).  Capacity-padded
+        with the NO_MATCH sentinel like every delta-staged family, so
+        appended partitions patch in place.
+        """
+        with self._lock:
+            key = (table.name, table.stats.uid, ckey)
+            P = table.stats.num_partitions
+            cap = plane_capacity(P)
+            row = np.full(cap, NO_MATCH, dtype=np.int8)
+            row[:P] = np.asarray(tv_row, dtype=np.int8)
+            cols = tuple(pred.columns()) if pred is not None else ()
+
+            def build():
+                return _PlaneEntry(self._table_version(table), P,
+                                   (jnp.asarray(row),),
+                                   meta=dict(cols=cols))
+
+            self._plane_fresh("verdict", self.verdict_planes, key, build)
+
     def invalidate(self, table_name: str, column: Optional[str] = None
                    ) -> None:
         """Drop staged planes for a table.
@@ -1561,6 +1687,14 @@ class DeviceStatsCache:
                 for k in stale:
                     del store[k]
                     self.memory.release(family, k)
+            # verdict keys carry a canonical predicate, not a column:
+            # match on the columns the cached predicate actually reads
+            stale = [k for k, e in self.verdict_planes.items()
+                     if k[0] == table_name
+                     and (column is None or column in e.meta.get("cols", ()))]
+            for k in stale:
+                del self.verdict_planes[k]
+                self.memory.release("verdict", k)
 
     # ---- DML hooks (mirror predicate_cache's safety analysis; staging a
     # stale stats plane is never *unsafe* for NO_MATCH only if stats were
@@ -1592,6 +1726,7 @@ class DeviceStatsCache:
         with self._lock:
             total = sum(e.nbytes for e in self.entries.values())
             for store in (self.key_planes, self.enum_planes,
-                          self.topk_planes, self.tree_planes):
+                          self.topk_planes, self.tree_planes,
+                          self.verdict_planes):
                 total += sum(e.nbytes for e in store.values())
             return total

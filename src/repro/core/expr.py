@@ -264,6 +264,84 @@ def or_(*preds: Pred) -> Pred:
     return preds[0] if len(preds) == 1 else Or(tuple(preds))
 
 
+# ---------------------------------------------------------------------------
+# Canonical predicate keys (predicate cache + batch dedupe)
+# ---------------------------------------------------------------------------
+
+# Comparison orientation flips for lit-on-left normalization.
+_CMP_FLIP = {">": "<", ">=": "<=", "<": ">", "<=": ">=", "==": "==",
+             "!=": "!="}
+
+
+def _canon_value(v) -> str:
+    """Normalize a literal so numerically equal constants collide.
+
+    ``1`` and ``1.0`` canonicalize identically; an int too wide for an
+    exact f64 keeps its integer spelling (folding it into a float would
+    merge *distinct* predicates, which is unsound for a cache key).
+    """
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return repr(v)
+    f = float(v)
+    return repr(f) if f == v else repr(v)
+
+
+def _canon(node) -> str:
+    if isinstance(node, Lit):
+        return f"lit({_canon_value(node.value)})"
+    if isinstance(node, Col):
+        return repr(node)
+    if isinstance(node, Arith):
+        return f"({_canon(node.lhs)} {node.op} {_canon(node.rhs)})"
+    if isinstance(node, If):
+        return (f"if_({_canon(node.cond)}, {_canon(node.then)}, "
+                f"{_canon(node.other)})")
+    if isinstance(node, Cmp):
+        lhs, rhs, op = node.lhs, node.rhs, node.op
+        if isinstance(lhs, Lit) and not isinstance(rhs, Lit):
+            lhs, rhs, op = rhs, lhs, _CMP_FLIP[op]
+        return f"({_canon(lhs)} {op} {_canon(rhs)})"
+    if isinstance(node, (And, Or)):
+        # Commutative + associative + idempotent: flatten same-kind
+        # nesting, canonicalize children, then sort and dedupe.
+        kind = type(node)
+        parts: list = []
+        for c in node.children:
+            if isinstance(c, kind):
+                parts.extend(c.children)
+            else:
+                parts.append(c)
+        keys = sorted(dict.fromkeys(_canon(c) for c in parts))
+        if len(keys) == 1:
+            return keys[0]
+        sep = " & " if kind is And else " | "
+        return "(" + sep.join(keys) + ")"
+    if isinstance(node, Not):
+        return f"~{_canon(node.child)}"
+    if isinstance(node, InSet):
+        vals = sorted(dict.fromkeys(_canon_value(v) for v in node.values))
+        return f"in_({_canon(node.col)}, ({', '.join(vals)}))"
+    if isinstance(node, (Like, StartsWith, IsNull, TruePred)):
+        return repr(node)
+    return repr(node)
+
+
+def canonical_key(pred) -> str:
+    """Canonical string key for a predicate: equal keys imply equivalent
+    predicates, and the common syntactic variants of one predicate —
+    commutative ``AND``/``OR`` orderings, ``1`` vs ``1.0`` literals,
+    lit-on-left comparisons, duplicate conjuncts — collide.
+
+    This is both the ``plan_key`` cache key (Sec. 8.2) and the
+    within-batch dedupe key for the device-resident verdict plane.
+    Non-predicate inputs (None, prebuilt repr strings from benchmarks)
+    fall back to ``repr``.
+    """
+    if not isinstance(pred, (Pred, Expr)):
+        return repr(pred)
+    return _canon(pred)
+
+
 def invert(pred: Pred) -> Pred:
     """Logical negation used for the Sec. 4.2 inverted-predicate pass."""
     if isinstance(pred, Not):

@@ -91,6 +91,7 @@ from .resilience import (DegradationLadder, new_resilience_counters,
 # a method here ONLY if its launches go through the ladder.
 LADDER_LAUNCH_SITES = frozenset({
     "PruningService._filter_rungs",
+    "PruningService._verdict_group",
     "PruningService.join_hit_batch",
     "PruningService.bloom_hit_batch",
     "PruningService.topk_init_batch",
@@ -149,6 +150,10 @@ class ServiceCounters:
 
 
 class PruningService:
+    # doorkeeper bound: past this many distinct (table, predicate) keys
+    # the seen-set resets rather than grow without bound
+    VERDICT_SEEN_CAP = 1 << 17
+
     def __init__(
         self,
         mode: str = "auto",            # kernel mode: auto|pallas|interpret|ref
@@ -174,6 +179,10 @@ class PruningService:
                                        # (None keeps the cache's default;
                                        # tests shrink it so small tables
                                        # exercise the tree rungs)
+        verdict_cache: bool = True,    # device-resident verdict plane:
+                                       # dedupe canonical predicates per
+                                       # batch and serve repeats without
+                                       # a launch (False: PR 8 behavior)
     ):
         self.mode = mode
         if cache is None:
@@ -214,16 +223,22 @@ class PruningService:
         self.versions: Dict[str, TableVersion] = {}
         self.counters = ServiceCounters()
         # The resilience layer: every batched launch executes through the
-        # degradation ladder (sharded tree -> tree -> sharded -> device ->
-        # host kernel -> host oracle -> passthrough; tree rungs only for
-        # tables large enough to carry a resident group plane), so a
-        # kernel failure, a torn plane, or a
+        # degradation ladder (verdict -> sharded tree -> tree -> sharded
+        # -> device -> host kernel -> host oracle -> passthrough; the
+        # verdict rung only with the verdict cache enabled, tree rungs
+        # only for tables large enough to carry a resident group plane),
+        # so a kernel failure, a torn plane, or a
         # deadline costs pruning quality, never correctness and never an
         # exception out of run_batch.  The counters dict is shared with
         # the ladder so demotions/retries surface per batch under
         # ``PruningReport.counters["resilience"]``.
         self.fault_injector = (fault_injector if fault_injector is not None
                                else cache.fault_injector)
+        self.verdict_cache = bool(verdict_cache)
+        # doorkeeper for seen-once verdict admission (_verdict_group)
+        self._verdict_seen: set = set()
+        # (stats uid, pred repr) pairs that validated clean (_validate_query)
+        self._validated: set = set()
         self.resilience = new_resilience_counters()
         self.ladder = DegradationLadder(
             policy=backoff, deadline_s=deadline_s, clock=clock, sleep=sleep,
@@ -424,6 +439,79 @@ class PruningService:
             return None
         return tv_rows[0]
 
+    def _verdict_group(self, table, jobs) -> list:
+        """One table group's filter verdicts through the verdict cache.
+
+        Jobs are deduped by canonical predicate key *before any launch*
+        (``verdict_deduped`` counts the saved duplicates), then the
+        unique predicates execute through the ladder with the ``verdict``
+        rung on top: serve resident verdict rows (a full-hit batch never
+        touches a kernel), launch only the missing predicates through
+        the ordinary ``_filter_rungs`` chain, and record the fresh
+        verdicts.  A verdict-plane integrity failure fails the rung and
+        the ladder demotes to the flat chain — cache-off is a demotion,
+        never a wrong answer.  Returns one ``[P]`` int8 row (or None for
+        passthrough) per job, duplicates fanned back out.
+
+        Admission is seen-once (a doorkeeper, as in TinyLFU): a
+        predicate earns a resident verdict row only on its *second*
+        sighting — in-batch repetition counts, so zipf/dashboard traffic
+        is admitted on its first batch, while one-shot exploratory
+        predicates never pay the record cost (HBM + checksum stamp) on
+        top of their launch.
+        """
+        ckeys = [E.canonical_key(pred) for _, _, _, pred in jobs]
+        uniq: Dict[str, int] = {}
+        counts: Dict[str, int] = {}
+        u_ranges: list = []
+        u_preds: list = []
+        for (_, _, ranges, pred), ck in zip(jobs, ckeys):
+            counts[ck] = counts.get(ck, 0) + 1
+            if ck not in uniq:
+                uniq[ck] = len(u_preds)
+                u_ranges.append(ranges)
+                u_preds.append(pred)
+        self.resilience["verdict_deduped"] += len(jobs) - len(u_preds)
+        u_keys = list(uniq)
+        admit = [counts[ck] > 1 or (table.name, ck) in self._verdict_seen
+                 for ck in u_keys]
+        if len(self._verdict_seen) > self.VERDICT_SEEN_CAP:
+            self._verdict_seen.clear()      # doorkeeper reset, TinyLFU-style
+        self._verdict_seen.update((table.name, ck) for ck in u_keys)
+
+        def verdict_rung():
+            rows: list = [None] * len(u_keys)
+            miss: list = []
+            # Pin scope: served verdict rows stay resident while the
+            # misses' launch consumes the stat planes.
+            with self.cache.pin_scope():
+                for i, (ck, pred) in enumerate(zip(u_keys, u_preds)):
+                    row = self.cache.verdict_plane(table, pred, ck)
+                    if row is None:
+                        miss.append(i)
+                    else:
+                        rows[i] = row
+                self.resilience["verdict_hits"] += len(u_keys) - len(miss)
+                self.resilience["verdict_misses"] += len(miss)
+                if miss:
+                    tv_rows, rung = self.ladder.execute(self._filter_rungs(
+                        table, [u_ranges[i] for i in miss],
+                        [u_preds[i] for i in miss]))
+                    if tv_rows is not None:
+                        for mi, tv in zip(miss, tv_rows):
+                            row = np.asarray(tv, dtype=np.int8)
+                            rows[mi] = row
+                            if rung != "passthrough" and admit[mi]:
+                                self.cache.verdict_record(
+                                    table, u_preds[mi], u_keys[mi], row)
+            return rows
+
+        u_rows, _rung = self.ladder.execute(
+            [("verdict", verdict_rung)]
+            + self._filter_rungs(table, u_ranges, u_preds))
+        u_rows = ([None] * len(u_keys) if u_rows is None else list(u_rows))
+        return [u_rows[uniq[ck]] for ck in ckeys]
+
     def prune_batch(self, queries: Sequence) -> List[Dict[str, ScanSet]]:
         """Filter-prune a batch of queries; per-query scan_name -> ScanSet.
 
@@ -458,15 +546,26 @@ class PruningService:
                 groups.setdefault(id(spec.table), (spec.table, []))[1].append(
                     (qi, name, ranges, spec.pred))
         for table, jobs in groups.values():
-            tv_rows, _rung = self.ladder.execute(self._filter_rungs(
-                table, [ranges for _, _, ranges, _ in jobs],
-                [pred for _, _, _, pred in jobs]))
-            if tv_rows is None:          # passthrough: fail prune-less
-                for qi, name, _ranges, _pred in jobs:
+            if self.verdict_cache:
+                rows = self._verdict_group(table, jobs)
+            else:
+                tv_rows, _rung = self.ladder.execute(self._filter_rungs(
+                    table, [ranges for _, _, ranges, _ in jobs],
+                    [pred for _, _, _, pred in jobs]))
+                rows = ([None] * len(jobs) if tv_rows is None
+                        else list(tv_rows))
+            # deduped jobs share one tv row OBJECT: materialize the O(P)
+            # scan set once per unique row, give each query its own
+            # ScanSet over the shared (read-only) arrays
+            memo: Dict[int, ScanSet] = {}
+            for (qi, name, _ranges, _pred), tv in zip(jobs, rows):
+                if tv is None:
                     results[qi][name] = self._passthrough_set(table)
-                continue
-            for (qi, name, _ranges, _pred), tv in zip(jobs, tv_rows):
-                results[qi][name] = self._scan_set(tv, table)
+                    continue
+                ss = memo.get(id(tv))
+                if ss is None:
+                    memo[id(tv)] = ss = self._scan_set(tv, table)
+                results[qi][name] = ScanSet(ss.part_ids, ss.match)
         for qi, name, spec in fallbacks:
             self.counters.bump("filter", fallbacks=1)
             try:
@@ -714,12 +813,24 @@ class PruningService:
         isolates the raise to this query instead of letting it abort the
         batch mid-launch.  Join/order-by column names are checked the
         same way.
+
+        Validity is a pure function of (stats identity, predicate) — a
+        table's schema and dtypes are fixed for its lifetime — so clean
+        probes are memoized: repeated traffic re-validates by a set
+        lookup instead of a per-query probe walk.  Failed probes are
+        never cached (a malformed spec raises every time).
         """
         for spec in q.scans.values():
             stats = spec.table.stats
+            vkey = (stats.uid, repr(spec.pred))
+            if vkey in self._validated:
+                continue
             probe = (stats.select(np.zeros(1, dtype=np.int64))
                      if stats.num_partitions > 1 else stats)
             eval_tv(spec.pred, probe)
+            if len(self._validated) > self.VERDICT_SEEN_CAP:
+                self._validated.clear()
+            self._validated.add(vkey)
         if q.join is not None:
             for scan_name, col in ((q.join.build, q.join.build_key),
                                    (q.join.probe, q.join.probe_key)):

@@ -48,17 +48,21 @@ import numpy as np
 from ..core.device_stats import PlaneIntegrityError  # noqa: F401  re-export
 
 # The ordered fallback chain.  A launch enters at the highest rung its
-# configuration supports (tree rungs only when the table is large enough
-# to carry a resident group plane, sharded only when the service has a
-# mesh) and only ever moves down; the bottom rung keeps every live
+# configuration supports (the verdict rung only when the service's
+# verdict cache is enabled, tree rungs only when the table is large
+# enough to carry a resident group plane, sharded only when the service
+# has a mesh) and only ever moves down; the bottom rung keeps every live
 # partition as PARTIAL — a superset of any correct answer, never FULL
 # (so LIMIT / the top-k boundary initializers cannot trust uncertified
-# rows).  The tree rungs run the hierarchical group pre-pass over the
-# ``[C, G]`` tree plane before touching leaves; a tree-plane fault
-# (integrity error, staging failure) demotes to the flat device rungs,
-# which never consult the tree family.
-RUNGS = ("sharded_tree", "tree", "sharded", "device", "host_kernel",
-         "host_oracle", "passthrough")
+# rows).  The ``verdict`` top rung serves device-resident cached verdict
+# rows (batch hits launch nothing); a verdict-plane fault (integrity
+# error) demotes to the ordinary kernel chain — cache-off is a demotion,
+# never a wrong answer.  The tree rungs run the hierarchical group
+# pre-pass over the ``[C, G]`` tree plane before touching leaves; a
+# tree-plane fault (integrity error, staging failure) demotes to the
+# flat device rungs, which never consult the tree family.
+RUNGS = ("verdict", "sharded_tree", "tree", "sharded", "device",
+         "host_kernel", "host_oracle", "passthrough")
 
 # Single registry of every counter key the serving layer may write —
 # dict keys of the resilience / integrity counter stores, report-section
@@ -71,6 +75,11 @@ COUNTER_REGISTRY = frozenset({
     # resilience counters (new_resilience_counters / DegradationLadder)
     "retries", "deadline_hits", "passthroughs", "errors",
     "salvaged_batches", "demotions",
+    # verdict-cache counters: batch hit/miss per unique canonical
+    # predicate (new_resilience_counters), within-batch duplicate
+    # launches saved (verdict_deduped), append-repair patches applied by
+    # the plane getter (core.device_stats integrity store)
+    "verdict_hits", "verdict_misses", "verdict_deduped", "verdict_repairs",
     # plane-integrity counters (core.device_stats.DeviceStatsCache)
     "verifications", "checksum_failures", "quarantines",
     # per-technique attribution (ServiceCounters.bump / .technique)
@@ -82,7 +91,8 @@ COUNTER_REGISTRY = frozenset({
 
 def new_resilience_counters() -> dict:
     return dict(retries=0, deadline_hits=0, passthroughs=0, errors=0,
-                salvaged_batches=0,
+                salvaged_batches=0, verdict_hits=0, verdict_misses=0,
+                verdict_deduped=0,
                 demotions={r: 0 for r in RUNGS[1:]})
 
 

@@ -114,6 +114,61 @@ class TestIntegrityProtocol:
         assert any("plane_checksum" in m for m in msgs)
         assert any("PlaneMemoryManager" in m for m in msgs)
 
+    def test_verdict_plane_getter_with_protocol_passes(self):
+        """A verdict-family getter that re-stamps on replay and touches
+        the memory accounting is protocol-compliant."""
+        findings = lint("src/repro/core/device_stats.py", """\
+            PLANE_FAMILIES = ("verdict",)
+
+            class DeviceStatsCache:
+                def __init__(self):
+                    self.verdict_planes = {}
+                    self._stores = {"verdict": self.verdict_planes}
+
+                def _touch(self, family, key):
+                    self.memory.touch(family, key)
+
+                def verdict_plane(self, table, pred, ckey):
+                    e = self.verdict_planes[(table.name, ckey)]
+                    e.meta["checksum"] = plane_checksum(e.arrays)
+                    self._touch("verdict", (table.name, ckey))
+                    return e.arrays[0]
+            """)
+        assert "CL002" not in rules(findings)
+
+    def test_flags_verdict_plane_getter_skipping_protocol(self):
+        """A verdict getter that serves rows without checksum stamping or
+        byte accounting violates the integrity protocol."""
+        findings = lint("src/repro/core/device_stats.py", """\
+            PLANE_FAMILIES = ("verdict",)
+
+            class DeviceStatsCache:
+                def __init__(self):
+                    self.verdict_planes = {}
+                    self._stores = {"verdict": self.verdict_planes}
+
+                def verdict_plane(self, table, pred, ckey):
+                    return self.verdict_planes[(table.name, ckey)].arrays[0]
+            """)
+        msgs = [f.message for f in findings if f.rule == "CL002"]
+        assert any("plane_checksum" in m for m in msgs)
+        assert any("PlaneMemoryManager" in m for m in msgs)
+
+    def test_flags_verdict_store_missing_from_registry(self):
+        """Shipping the verdict store without declaring the family in
+        PLANE_FAMILIES is exactly what CL002 exists to catch."""
+        findings = lint("src/repro/core/device_stats.py", """\
+            PLANE_FAMILIES = ("stat",)
+
+            class DeviceStatsCache:
+                def __init__(self):
+                    self._stores = {"stat": self.entries,
+                                    "verdict": self.verdict_planes}
+            """)
+        msgs = [f.message for f in findings if f.rule == "CL002"]
+        assert any("'verdict'" in m and "integrity protocol" in m
+                   for m in msgs)
+
     def test_flags_store_family_not_in_registry(self):
         findings = lint("src/repro/core/device_stats.py", """\
             PLANE_FAMILIES = ("stat",)

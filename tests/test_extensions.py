@@ -95,6 +95,97 @@ class TestPredicateCache:
         assert len(cache.entries) == 2
         assert cache.lookup(plan_key("t", None, "v", True, 0), tv) is None
 
+    def test_plan_key_canonicalizes_equivalent_predicates(self):
+        """Regression: plan_key used raw repr(pred) — commuted conjuncts
+        and 1-vs-1.0 literals of one predicate always missed."""
+        p1 = (E.col("v") >= 100) & (E.col("w") < 500)
+        p2 = (E.col("w") < 500.0) & (E.col("v") >= 100.0)   # commuted + float
+        assert plan_key("t", p1, "v", True, 5) == plan_key("t", p2, "v",
+                                                           True, 5)
+        # lit-on-left orientation normalizes too
+        assert E.canonical_key(E.lit(100) <= E.col("v")) == \
+            E.canonical_key(E.col("v") >= 100)
+        # nested/duplicated conjuncts flatten and dedupe
+        assert E.canonical_key(E.And((p1, E.col("v") >= 100))) == \
+            E.canonical_key(p2)
+        # genuinely different predicates keep distinct keys
+        assert plan_key("t", p1, "v", True, 5) != \
+            plan_key("t", (E.col("v") >= 101) & (E.col("w") < 500), "v",
+                     True, 5)
+        # ints too wide for an exact f64 must NOT merge with their float
+        assert E.canonical_key(E.col("v") == (2 ** 53 + 1)) != \
+            E.canonical_key(E.col("v") == float(2 ** 53))
+
+    def test_update_of_predicate_column_invalidates(self):
+        """Regression: on_update matched only the *order* column, so an
+        UPDATE to a predicate-only column served a stale contributing set
+        — a wrong top-k."""
+        tbl = Table.build(
+            "t", {"v": np.array([0, 1, 10, 11, 20, 21, 30, 31], np.int64),
+                  "w": np.array([1, 1, 1, 1, 0, 0, 0, 0], np.int64)},
+            rows_per_partition=2)
+        pred = E.col("w") >= 1
+        cache = PredicateCache()
+        tv = TableVersion(tbl.num_partitions)
+        key = plan_key("t", pred, "v", True, 2)
+        # top-2 of v among rows passing the predicate lives in partition 1
+        cache.record(key, np.array([1]), tv, pred=pred)
+        # UPDATE w: now partitions 2,3 pass — the correct top-2 is (30, 31)
+        tbl.update_column("w", np.array([0, 0, 0, 0, 1, 1, 1, 1], np.int64))
+        # the stale cached set would produce a wrong answer:
+        stale_top2 = np.sort(tbl.data["v"][2:4])            # partition 1
+        oracle = np.sort(tbl.data["v"][tbl.data["w"] >= 1])[-2:]
+        assert not np.array_equal(stale_top2, oracle)
+        # ...so an update of a column the predicate reads must invalidate
+        cache.on_update("t", "w")
+        assert cache.lookup(key, tv) is None
+
+    def test_drop_then_append_freshness_uses_delta_log(self):
+        """Regression: the raw-count arange union resurrected dropped
+        partition ids (drops tombstone in place; appends extend)."""
+        rng = np.random.default_rng(3)
+        def cols(n):
+            return {"v": rng.integers(0, 100, n).astype(np.int64),
+                    "w": rng.integers(0, 100, n).astype(np.int64)}
+        tbl = Table.build("t", cols(100), rows_per_partition=10)
+        pred = E.col("w") >= 0
+        cache = PredicateCache()
+        tv = TableVersion(tbl.num_partitions)
+        key = plan_key("t", pred, "v", True, 3)
+        cache.record(key, np.array([1, 2, 5]), tv, pred=pred, table=tbl)
+        tbl.drop_partitions(np.array([2, 7]))
+        tv.version += 1
+        tbl.append_partitions(cols(20), rows_per_partition=10)  # ids 10, 11
+        tv.insert_partitions(2)
+        hit = cache.lookup(key, tv, table=tbl)
+        assert hit is not None
+        assert 2 not in hit and 7 not in hit    # tombstones never resurrect
+        assert {1, 5, 10, 11} <= set(hit.tolist())
+        # the legacy raw-count path on the same history would have served
+        # np.arange(10, 12) unioned onto [1, 2, 5] — including dropped 2
+        # rewrite since record time: unsafe, must miss
+        n = int(np.diff(tbl.part_bounds)[1])
+        tbl.rewrite_partitions([1], cols(n))
+        tv.version += 1
+        assert cache.lookup(key, tv, table=tbl) is None
+
+    def test_delta_log_update_of_predicate_column_misses(self):
+        rng = np.random.default_rng(4)
+        tbl = Table.build(
+            "t", {"v": rng.integers(0, 100, 40).astype(np.int64),
+                  "w": rng.integers(0, 100, 40).astype(np.int64)},
+            rows_per_partition=10)
+        pred = E.col("w") >= 50
+        cache = PredicateCache()
+        tv = TableVersion(tbl.num_partitions)
+        key = plan_key("t", pred, "v", True, 3)
+        cache.record(key, np.array([0, 2]), tv, pred=pred, table=tbl)
+        assert cache.lookup(key, tv, table=tbl) is not None
+        # update of the predicate column via the delta log: miss
+        tbl.update_column("w", rng.integers(0, 100, 40).astype(np.int64))
+        tv.version += 1
+        assert cache.lookup(key, tv, table=tbl) is None
+
 
 class TestIcebergTwoLevel:
     @settings(max_examples=60, deadline=None)

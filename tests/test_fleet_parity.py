@@ -299,7 +299,9 @@ class TestEvictionInvariants:
         evict it — and goes first once the scope closes."""
         tables, dim = build_fleet(2, seed=3)
         a, b = tables
-        svc = PruningService(mode="ref")
+        # verdict-cache off: a repeat of q(b) must re-stage b's stat
+        # plane (a verdict hit would serve without touching the budget)
+        svc = PruningService(mode="ref", verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc,
                                join_ndv_limit=NDV_LIMIT)
         q = lambda t: Query(scans={t.name: TableScanSpec(  # noqa: E731

@@ -270,7 +270,10 @@ class TestTreeDMLParity:
         plane delta-replays alongside the flat plane (no full restage)."""
         rng = np.random.default_rng(11)
         fact, dim = self._tree_tables(11)
-        svc = PruningService(mode="ref", tree_fanout=4)
+        # verdict-cache off: this pins the flat+tree planes' own delta
+        # replays, which a verdict hit would skip entirely
+        svc = PruningService(mode="ref", tree_fanout=4,
+                             verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc)
         qs = [Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)})]
         svc.run_batch(qs, pipe)            # stages flat + tree planes
@@ -310,7 +313,9 @@ class TestDeltaStagingCounters:
         rng = np.random.default_rng(seed)
         fact = Table.build("f", _rows(rng, n),
                            rows_per_partition=rows_per_partition)
-        svc = PruningService(mode="ref")
+        # verdict-cache off: these tests pin the *flat* plane families'
+        # delta staging; a verdict hit would skip cache.get entirely
+        svc = PruningService(mode="ref", verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc)
         qs = [Query(scans={"f": TableScanSpec(fact, E.col("v") >= 0)}),
               Query(scans={"f": TableScanSpec(fact, E.col("g") <= 25)},
@@ -383,7 +388,9 @@ class TestDeltaStagingCounters:
             "a": rng.integers(0, 100, 40).astype(np.int64),
             "k": rng.integers(0, 60, 40).astype(np.int64),
         }, rows_per_partition=8)
-        svc = PruningService(mode="ref")
+        # verdict-cache off: pins the column-granular [C, P]-row restage,
+        # which a verdict hit on the filter stage would skip
+        svc = PruningService(mode="ref", verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc,
                                join_ndv_limit=4)
         qs = [

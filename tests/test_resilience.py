@@ -171,9 +171,9 @@ class TestDegradationLadder:
         assert (result, rung) == ("host", "host_kernel")
         assert c["retries"] == 2           # two re-attempts on the rung
         assert clock.sleeps == [1.0, 2.0]  # deterministic exponential
-        assert c["demotions"] == {"tree": 0, "sharded": 0, "device": 0,
-                                  "host_kernel": 1, "host_oracle": 0,
-                                  "passthrough": 0}
+        assert c["demotions"] == {"sharded_tree": 0, "tree": 0, "sharded": 0,
+                                  "device": 0, "host_kernel": 1,
+                                  "host_oracle": 0, "passthrough": 0}
 
     def test_deadline_refuses_to_sleep_into_expiry(self):
         # base delay alone exceeds the stage deadline: abandon the rung
@@ -231,8 +231,9 @@ class TestDegradationLadder:
             lad.execute([("device", bad), ("host_kernel", bad)])
 
     def test_rung_order_matches_contract(self):
-        assert RUNGS == ("sharded_tree", "tree", "sharded", "device",
-                         "host_kernel", "host_oracle", "passthrough")
+        assert RUNGS == ("verdict", "sharded_tree", "tree", "sharded",
+                         "device", "host_kernel", "host_oracle",
+                         "passthrough")
 
 
 # ---------------------------------------------------------------------------

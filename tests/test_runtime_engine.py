@@ -586,7 +586,9 @@ class TestBloomEngineParity:
 class TestPlaneInvalidation:
     def _service_with_staged_planes(self):
         events, users = _engine_tables(seed=9)
-        svc = PruningService(mode="ref")
+        # verdict cache off: these tests pin exact flat plane-staging
+        # miss counts, which verdict-plane misses would perturb
+        svc = PruningService(mode="ref", verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc)
         rng = np.random.default_rng(10)
         svc.run_batch(_mixed_workload(events, users, rng, n=8), pipe)
@@ -646,7 +648,8 @@ class TestPlaneInvalidation:
         discipline: a key-column update re-stages it, an unrelated-column
         update keeps it resident, insert/delete drop it."""
         events, users = _engine_tables(seed=27)
-        svc = PruningService(mode="ref")
+        # verdict cache off: the test counts enum-plane misses exactly
+        svc = PruningService(mode="ref", verdict_cache=False)
         pipe = PruningPipeline(filter_mode="device", service=svc,
                                join_ndv_limit=8)
         rng = np.random.default_rng(28)

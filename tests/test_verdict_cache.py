@@ -1,0 +1,186 @@
+"""ISSUE 9: the device-resident verdict cache through the DML wringer.
+
+The tentpole guarantee: with repeated traffic, resident per-(table
+version, canonical predicate) verdict rows serve whole batches without
+touching a kernel, are delta-repaired on append (only the new
+partitions evaluated host-side, patched in place) and tombstoned on
+drop — and stay **bit-identical** to both the cache-disabled service
+and the f64 host oracle after ANY sequence of append / drop / rewrite /
+update.  A torn verdict plane is a quarantine plus a ladder demotion to
+the ordinary kernel chain — a counter, never a wrong verdict.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import expr as E
+from repro.core.flow import PruningPipeline, Query, TableScanSpec
+from repro.data.table import Table
+from repro.serve.prune_service import PruningService
+from repro.serve.resilience import FaultInjector
+
+from test_ingest_parity import (NDV_LIMIT, _apply_dml, _assert_reports_equal,
+                                _base_tables, _queries, dml_programs)
+
+NO_SLEEP = lambda d: None  # noqa: E731
+
+
+def _svc(pipe_kw=None, **kw):
+    svc = PruningService(mode="ref", **kw)
+    pipe = PruningPipeline(filter_mode="device", service=svc,
+                           join_ndv_limit=NDV_LIMIT, **(pipe_kw or {}))
+    return svc, pipe
+
+
+def _small_table(seed=0, n=110):
+    rng = np.random.default_rng(seed)
+    return Table.build(
+        "t", {"v": rng.integers(-200, 1000, n).astype(np.int64),
+              "w": rng.integers(0, 100, n).astype(np.int64)},
+        rows_per_partition=10)
+
+
+def _q(tbl, pred):
+    return Query(scans={tbl.name: TableScanSpec(tbl, pred)})
+
+
+class TestVerdictDMLParity:
+    """cache-enabled run_batch == cache-disabled == f64 host oracle."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(program=dml_programs())
+    def test_repeated_batches_under_dml(self, program):
+        seed, ops = program
+        rng = np.random.default_rng(seed)
+        fact, dim = _base_tables(seed)
+
+        cached_svc, cached_pipe = _svc()                 # default: cache on
+        plain_svc, plain_pipe = _svc(verdict_cache=False)
+        host_pipe = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+
+        for step, op in enumerate([("noop",)] + list(ops)):
+            if op[0] != "noop":
+                _apply_dml(fact, op, rng)
+            # identical literals at every step: repeated traffic, so the
+            # cached service serves delta-repaired verdict rows rather
+            # than relaunching — exactly the state parity must pin
+            qs = _queries(fact, dim, np.random.default_rng(seed % 9973))
+            # run the cached service twice per step: the second pass is
+            # the hit-served one (seen-once admission records on the
+            # second sighting of a predicate) — both must match
+            cached = cached_svc.run_batch(qs, cached_pipe)
+            cached2 = cached_svc.run_batch(qs, cached_pipe)
+            plain = plain_svc.run_batch(qs, plain_pipe)
+            host = [host_pipe.run(q) for q in qs]
+            _assert_reports_equal(qs, cached, plain,
+                                  f"step {step} ({op[0]}) cached-vs-plain")
+            _assert_reports_equal(qs, cached, host,
+                                  f"step {step} ({op[0]}) cached-vs-host")
+            _assert_reports_equal(qs, cached2, host,
+                                  f"step {step} ({op[0]}) hit-vs-host")
+        # harness sanity: the cache actually served (not vacuous parity)
+        res = cached_svc.resilience
+        assert res["verdict_hits"] > 0
+        assert plain_svc.resilience["verdict_hits"] == 0
+
+
+class TestVerdictDedupeAndHits:
+    def test_batch_dedupes_equivalent_predicates_before_launch(self):
+        tbl = _small_table()
+        svc, pipe = _svc()
+        p = (E.col("v") >= 100) & (E.col("w") < 50)
+        qs = [_q(tbl, p),
+              _q(tbl, (E.col("w") < 50) & (E.col("v") >= 100)),   # commuted
+              _q(tbl, (E.col("v") >= 100.0) & (E.col("w") < 50)),  # 100.0
+              _q(tbl, E.col("v") >= 700)]                          # distinct
+        got = svc.run_batch(qs, pipe)
+        assert svc.resilience["verdict_deduped"] == 2
+        assert svc.resilience["verdict_misses"] == 2   # two unique keys
+        assert svc.resilience["verdict_hits"] == 0
+        # equivalent predicates share one verdict row, bit-identical
+        for rep in got[:3]:
+            np.testing.assert_array_equal(
+                rep.scan_sets["t"].part_ids, got[0].scan_sets["t"].part_ids)
+            np.testing.assert_array_equal(
+                rep.scan_sets["t"].match, got[0].scan_sets["t"].match)
+
+    def test_full_hit_batch_never_touches_a_kernel(self):
+        tbl = _small_table()
+        svc, pipe = _svc()
+        qs = [_q(tbl, (E.col("v") >= 100) & (E.col("w") < 50)),
+              _q(tbl, E.col("v") >= 700)]
+        first = svc.run_batch(qs, pipe)
+        svc.run_batch(qs, pipe)     # second sighting: doorkeeper admits
+        launches_so_far = svc.counters.launches
+        third = svc.run_batch(qs, pipe)
+        assert svc.counters.launches == launches_so_far   # zero new
+        assert svc.resilience["verdict_hits"] == 2
+        _assert_reports_equal(qs, third, first, "full-hit repeat")
+
+    def test_append_repairs_in_place_instead_of_relaunching(self):
+        rng = np.random.default_rng(7)
+        tbl = _small_table(seed=7)
+        svc, pipe = _svc()
+        host = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+        qs = [_q(tbl, (E.col("v") >= 100) & (E.col("w") < 50))]
+        svc.run_batch(qs, pipe)
+        svc.run_batch(qs, pipe)     # second sighting: verdict row recorded
+        tbl.append_partitions(
+            {"v": rng.integers(-200, 1000, 30).astype(np.int64),
+             "w": rng.integers(0, 100, 30).astype(np.int64)},
+            rows_per_partition=10)
+        tbl.drop_partitions([2])
+        got = svc.run_batch(qs, pipe)
+        assert svc.resilience["verdict_hits"] == 1       # repaired, not missed
+        assert svc.cache.integrity["verdict_repairs"] >= 1
+        _assert_reports_equal(qs, got, [host.run(q) for q in qs],
+                              "append+drop repair")
+
+
+class TestVerdictChaos:
+    def test_torn_resident_row_quarantined_then_serves_truth(self):
+        """A verdict row torn at record time: the sampled verifier
+        catches it on the next serve, quarantines, and the miss relaunch
+        records a clean row — a counter, never a wrong verdict."""
+        tbl = _small_table(seed=10)
+        inj = FaultInjector(seed=1)
+        inj.add("stage.verdict", kind="corrupt", times=1)
+        svc, pipe = _svc(fault_injector=inj)
+        host = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+        qs = [_q(tbl, (E.col("v") >= 100) & (E.col("w") < 50))]
+        svc.cache.integrity_sample = 0          # record the torn row blind
+        svc.run_batch(qs, pipe)
+        svc.run_batch(qs, pipe)     # second sighting records (torn)
+        svc.cache.integrity_sample = 1          # verify on every serve
+        got = svc.run_batch(qs, pipe)
+        integ = svc.cache.integrity
+        assert integ["checksum_failures"] >= 1
+        assert integ["quarantines"] >= 1
+        assert svc.resilience["verdict_misses"] >= 3  # cold x2 + quarantine
+        _assert_reports_equal(qs, got, [host.run(q) for q in qs],
+                              "torn-verdict")
+        # the relaunch recorded clean: the third batch is a verified hit
+        third = svc.run_batch(qs, pipe)
+        assert svc.resilience["verdict_hits"] >= 1
+        _assert_reports_equal(qs, third, got, "post-quarantine hit")
+
+    def test_persistent_corruption_demotes_never_wrong(self):
+        """Every verdict staging torn: the integrity protocol raises
+        internally, the ladder demotes cache-off to the flat kernel
+        chain, and the batch still returns the exact answer."""
+        tbl = _small_table(seed=11)
+        inj = FaultInjector(seed=2)
+        inj.add("stage.verdict", kind="corrupt")        # no times cap
+        svc, pipe = _svc(fault_injector=inj, integrity_sample=1,
+                         sleep=NO_SLEEP)
+        host = PruningPipeline(join_ndv_limit=NDV_LIMIT)
+        qs = [_q(tbl, (E.col("v") >= 100) & (E.col("w") < 50)),
+              _q(tbl, E.col("v") >= 700)]
+        svc.run_batch(qs, pipe)     # first sighting: nothing recorded yet
+        got = svc.run_batch(qs, pipe)   # records -> torn -> demote
+        _assert_reports_equal(qs, got, [host.run(q) for q in qs],
+                              "persistent-verdict-corruption")
+        res = got[0].counters["resilience"]
+        assert sum(res["demotions"].values()) >= 1      # cache-off demotion
+        assert res["passthroughs"] == 0
+        assert svc.cache.integrity["quarantines"] >= 1
