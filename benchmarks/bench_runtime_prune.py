@@ -36,6 +36,7 @@ from repro.core import expr as E
 from repro.core.flow import JoinSpec, PruningPipeline, Query, TableScanSpec
 from repro.data.generator import make_events_table, make_users_table
 from repro.data.table import Table
+from repro.serve.frontend import ServingFrontend
 from repro.serve.prune_service import PruningService
 
 from .common import emit
@@ -531,6 +532,111 @@ def run_resilience_cell(n_tables: int = RES_TABLES,
     )
 
 
+SLO_BATCH_CAP = 16          # front-end micro-batch size cap Q
+SLO_LOAD_FRACS = (0.25, 0.5, 0.75, 0.9, 1.0, 1.1)
+SLO_SERVICE_MULT = 4.0      # SLO = deadline + this many batch services
+
+
+def _reports_equal(a, b) -> bool:
+    """Bit-identical pruning outcome: same scan sets, same top-k rows."""
+    if set(a.scan_sets) != set(b.scan_sets):
+        return False
+    for n in a.scan_sets:
+        if not (np.array_equal(a.scan_sets[n].part_ids,
+                               b.scan_sets[n].part_ids)
+                and np.array_equal(a.scan_sets[n].match,
+                                   b.scan_sets[n].match)):
+            return False
+    if (a.topk is None) != (b.topk is None):
+        return False
+    if a.topk is not None:
+        return (np.array_equal(a.topk.values, b.topk.values)
+                and np.array_equal(a.topk.skipped, b.topk.skipped))
+    return True
+
+
+def run_slo_cell(P: int, Q: int, rng) -> dict:
+    """Serving-SLO cell (ISSUE 10): offered-load sweep to the p99 knee.
+
+    Baseline: synchronous ``run_batch`` over the workload in B-sized
+    chunks — the throughput ceiling the async front-end must track.
+    Sweep: open-loop arrivals paced at fractions of that ceiling through
+    a threaded ``ServingFrontend`` (deadline sized to ~1.5 batch fill
+    times, so the size cap fires under load and the deadline bounds the
+    tail when traffic is sparse).  The knee is the highest offered load
+    whose measured p99 still meets the SLO; "qps under SLO" is the
+    achieved throughput there.  A manual-mode front-end also replays the
+    workload as one size-capped batch to pin bit-identical parity with
+    direct ``run_batch``.
+    """
+    events, users = tables(P)
+    queries = make_queries(Q, events, users, rng)
+    B = min(Q, SLO_BATCH_CAP)
+    svc = PruningService(mode="ref", verdict_cache=False)
+    pipe = PruningPipeline(filter_mode="device", service=svc)
+    chunks = [queries[i:i + B] for i in range(0, Q, B)]
+
+    def sync():
+        for c in chunks:
+            svc.run_batch(c, pipe)
+
+    sync()                                    # warm jits + planes
+    s_sync = _time(sync, 1)
+    qps_sync = Q / s_sync
+    batch_s = s_sync / len(chunks)
+    deadline_s = 1.5 * B / qps_sync
+    slo_ms = (deadline_s + SLO_SERVICE_MULT * batch_s) * 1e3
+
+    # Parity: one size-capped manual dispatch vs direct run_batch.
+    direct = svc.run_batch(queries, pipe)
+    with ServingFrontend(svc, pipe, max_batch=Q, deadline_s=60.0,
+                         threaded=False) as fe:
+        futs = [fe.submit(q) for q in queries]   # Q-th submit dispatches
+    identical = all(_reports_equal(f.result().report, d)
+                    for f, d in zip(futs, direct))
+
+    levels = []
+    for frac in SLO_LOAD_FRACS:
+        rate = qps_sync * frac
+        before = dict(svc.latency)
+        fe = ServingFrontend(svc, pipe, max_batch=B, deadline_s=deadline_s)
+        futs = []
+        t0 = time.monotonic()
+        for i, q in enumerate(queries):
+            lag = t0 + i / rate - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(fe.submit(q))
+        fe.drain()
+        s_level = time.monotonic() - t0
+        fe.close()
+        lats = np.asarray([f.result().latency_ms for f in futs])
+        p50, p99 = np.percentile(lats, (50.0, 99.0))
+        levels.append(dict(
+            offered_frac=frac, offered_qps=rate,
+            achieved_qps=Q / s_level,
+            p50_ms=float(p50), p99_ms=float(p99),
+            max_ms=float(lats.max()),
+            deadline_fired=svc.latency["deadline_fired"]
+            - before["deadline_fired"],
+            size_fired=svc.latency["size_fired"] - before["size_fired"],
+            flush_fired=svc.latency["flush_fired"] - before["flush_fired"],
+        ))
+    under = [lv for lv in levels if lv["p99_ms"] <= slo_ms]
+    knee = max(under, key=lambda lv: lv["achieved_qps"]) if under else None
+    return dict(
+        P=P, Q=Q, batch=B,
+        deadline_ms=deadline_s * 1e3, slo_ms=slo_ms,
+        qps_sync=qps_sync,
+        levels=levels,
+        knee_offered_frac=knee["offered_frac"] if knee else None,
+        knee_p99_ms=knee["p99_ms"] if knee else None,
+        qps_under_slo=knee["achieved_qps"] if knee else 0.0,
+        frontend_identical=bool(identical),
+        prefetch_stages=svc.cache.staging_snapshot()["prefetch_stages"],
+    )
+
+
 def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         json_path: str = "BENCH_runtime_prune.json"):
     rng = np.random.default_rng(0)
@@ -652,6 +758,21 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
         f"{resilience_cell['verifications']} verifies, "
         f"{resilience_cell['demotions']} demotions",
     ))
+    # Serving-SLO cell (ISSUE 10): async front-end offered-load sweep to
+    # the p99 knee — the first end-to-end qps-under-SLO number for the
+    # fleet path, plus bit-identical parity with direct run_batch.
+    slo_cell = run_slo_cell(max(grid_p), max(grid_q), rng)
+    knee_p99 = slo_cell["knee_p99_ms"]
+    rows.append((
+        f"runtime_prune_slo_P{slo_cell['P']}_Q{slo_cell['Q']}",
+        1e6 * slo_cell["Q"] / max(slo_cell["qps_under_slo"], 1e-9),
+        f"qps_under_slo={slo_cell['qps_under_slo']:.0f} vs "
+        f"sync={slo_cell['qps_sync']:.0f} | "
+        f"knee@{slo_cell['knee_offered_frac']} "
+        f"p99={'-' if knee_p99 is None else f'{knee_p99:.2f}'}ms "
+        f"(slo {slo_cell['slo_ms']:.2f}ms) "
+        f"identical={slo_cell['frontend_identical']}",
+    ))
     if csv:
         emit(rows)
     if json_path:
@@ -667,6 +788,7 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
             fleet=fleet_cell,
             resilience=resilience_cell,
             verdict=verdict_cell,
+            slo=slo_cell,
             acceptance=dict(
                 target="qps_batched >= 5x qps_loop at Q=256, P=100k",
                 speedup=accept[0]["speedup"] if accept else None,
@@ -727,6 +849,22 @@ def run(grid_p=GRID_P, grid_q=GRID_Q, csv: bool = True,
                     verdict_cell["norep_qps_ratio"] >= 0.95)
                     if (verdict_cell["P"], verdict_cell["Q"])
                     == (100_000, 256) else None),
+                slo_target=("async front-end qps under the p99 SLO within "
+                            "10% of synchronous run_batch qps at equal "
+                            "batch size; results bit-identical"),
+                slo_qps_under_slo=slo_cell["qps_under_slo"],
+                slo_qps_sync=slo_cell["qps_sync"],
+                slo_identical=slo_cell["frontend_identical"],
+                # None off the acceptance size (BENCH_CI small grid):
+                # tiny cells make thread-scheduling noise dominate the
+                # knee, so a boolean there would publish spurious
+                # per-PR failures
+                slo_passed=(bool(
+                    slo_cell["qps_under_slo"]
+                    >= 0.9 * slo_cell["qps_sync"]
+                    and slo_cell["frontend_identical"])
+                    if (slo_cell["P"], slo_cell["Q"]) == (100_000, 256)
+                    else None),
             ),
         )
         with open(json_path, "w") as f:

@@ -762,6 +762,8 @@ class DeviceStatsCache:
         self.delta_stages = 0      # successful delta replays (any family)
         self.full_restages = 0     # full restagings of previously-resident
                                    # planes (rewrite / log gap / overflow)
+        self.prefetch_stages = 0   # prefetch() calls that actually staged
+                                   # bytes (serving front-end overlap)
         # HBM budget across all plane families.  With a budget set, the
         # byte-LRU memory manager governs residency and the legacy
         # count caps (max_entries / max_planes) are inactive; without
@@ -934,7 +936,33 @@ class DeviceStatsCache:
     def staging_snapshot(self) -> dict:
         return dict(staged_bytes=self.staged_bytes,
                     delta_stages=self.delta_stages,
-                    full_restages=self.full_restages)
+                    full_restages=self.full_restages,
+                    prefetch_stages=self.prefetch_stages)
+
+    def prefetch(self, table, tv: Optional[TableVersion] = None) -> bool:
+        """Opportunistically stage the table's [C, cap] stat plane ahead
+        of its launch — the serving front-end's double-buffer seam: a
+        staging thread prefetches batch N+1's planes while batch N's
+        launches run lock-free on device.
+
+        Runs the ordinary ``get`` path (epoch check, delta replay,
+        checksum stamp, budget accounting — nothing is bypassed), under
+        the same reentrant lock, so a concurrent getter simply finds the
+        plane already resident.  Never raises: prefetch is advisory, and
+        a staging failure here surfaces on the real launch where the
+        degradation ladder handles it.  Returns True when bytes were
+        actually staged (counted in ``prefetch_stages``).
+        """
+        with self._lock:
+            before = self.staged_bytes
+            try:
+                self.get(table, tv)
+            except Exception:
+                return False
+            staged = self.staged_bytes > before
+            if staged:
+                self.prefetch_stages += 1
+            return staged
 
     def plane_epoch(self, table) -> Optional[PlaneEpoch]:
         """The resident [C, cap] plane's epoch for this table, if staged."""

@@ -101,27 +101,44 @@ class ContinuousBatcher:
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            logits, kv = self._prefill1(
-                self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
-            self.cache = self._write_slot(self.cache, kv, slot)
-            self.slot_req[slot] = req
-            self.positions[slot] = len(req.tokens)
-            self.last_tok[slot] = int(jnp.argmax(logits[0]))
-            req.out.append(int(self.last_tok[slot]))
+            # A request can finish at admit time (max_new=1 satisfied by
+            # the prefill token, or eos as the first token), leaving this
+            # slot free — keep admitting from the queue until the slot is
+            # actually occupied or the queue drains.
+            while self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, kv = self._prefill1(
+                    self.params, {"tokens": jnp.asarray(req.tokens[None, :])})
+                tok = int(jnp.argmax(logits[0]))
+                req.out.append(tok)
+                if len(req.out) >= req.max_new or tok == self.eos_id:
+                    # Done conditions hold before any decode step: finish
+                    # now, never occupy the slot (an eos-first request
+                    # must not keep decoding, and max_new=1 must emit
+                    # exactly one token).  The prefilled KV is dropped —
+                    # the slot's cache region stays whatever it was.
+                    req.done = True
+                    self.finished[req.rid] = req
+                    continue
+                self.cache = self._write_slot(self.cache, kv, slot)
+                self.slot_req[slot] = req
+                self.positions[slot] = len(req.tokens)
+                self.last_tok[slot] = tok
 
     def _step(self) -> None:
-        if not self.active():
+        # Snapshot the occupied slots up front: the decode launch always
+        # runs the full [n_slots] batch (fixed device shape), but only
+        # slots in this snapshot may be read back — freed slots carry
+        # zeroed last_tok/positions and their logits are discarded.
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
             return
         toks = jnp.asarray(self.last_tok[:, None])
         pos = jnp.asarray(self.positions)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
+        for slot in active:
+            req = self.slot_req[slot]
             self.positions[slot] += 1
             tok = int(nxt[slot])
             self.last_tok[slot] = tok
@@ -132,3 +149,8 @@ class ContinuousBatcher:
                 self.finished[req.rid] = req
                 self.slot_req[slot] = None
                 self.positions[slot] = 0
+                # Zero on release: a recycled slot must never observe its
+                # predecessor's token (the next occupant overwrites both
+                # fields at admit, but stale state should not survive to
+                # be read by accident either).
+                self.last_tok[slot] = 0

@@ -80,8 +80,9 @@ from ..core.predicate_cache import TableVersion
 from ..core.prune_filter import eval_tv, extract_ranges
 from ..core.prune_join import DEFAULT_ENUM_LIMIT, BuildSummary
 from ..kernels import ops as kops
-from .resilience import (DegradationLadder, new_resilience_counters,
-                         resilience_delta, resilience_snapshot)
+from .resilience import (DegradationLadder, new_latency_counters,
+                         new_resilience_counters, resilience_delta,
+                         resilience_snapshot)
 
 # Registered DegradationLadder launch sites: the only methods allowed to
 # call ``kops.*_batched_*`` entrypoints.  Each builds a rung list that is
@@ -95,6 +96,11 @@ LADDER_LAUNCH_SITES = frozenset({
     "PruningService.join_hit_batch",
     "PruningService.bloom_hit_batch",
     "PruningService.topk_init_batch",
+    # The async front-end's dispatch path (serve/frontend.py): every
+    # launch it triggers goes through run_batch, whose stages execute
+    # exclusively via the registered rung builders above — registering
+    # the dispatch method keeps the reviewed launch-path list complete.
+    "ServingFrontend._execute",
 })
 
 # Boundary-init k cap: the kernel's rank-selection merge is quadratic in
@@ -240,6 +246,10 @@ class PruningService:
         # (stats uid, pred repr) pairs that validated clean (_validate_query)
         self._validated: set = set()
         self.resilience = new_resilience_counters()
+        # Service-lifetime latency/SLO block, written by the async
+        # front-end (serve.frontend.ServingFrontend) and surfaced through
+        # fleet_summary()["latency"]; stays all-zero for synchronous use.
+        self.latency = new_latency_counters()
         self.ladder = DegradationLadder(
             policy=backoff, deadline_s=deadline_s, clock=clock, sleep=sleep,
             counters=self.resilience)
@@ -308,6 +318,35 @@ class PruningService:
     def plane_epoch(self, table) -> Optional[PlaneEpoch]:
         """(version, live count, capacity) of the table's resident plane."""
         return self.cache.plane_epoch(table)
+
+    def prestage(self, queries: Sequence) -> int:
+        """Prefetch the stat planes a batch of queries will consume —
+        the front-end's double-buffer seam: while batch N's launches run
+        on the worker, the batcher thread prestages batch N+1's deltas
+        so its getters hit resident planes.
+
+        Threads ``pin_scope`` around the prefetches so the
+        ``PlaneMemoryManager`` cannot evict a plane this very call just
+        staged while admitting the next table under the budget (launch
+        scopes re-pin at launch time; pins are refcounts, so a
+        concurrent in-flight launch is never evicted either).  Advisory
+        and never raises; returns the number of planes that actually
+        staged bytes (also counted in ``staging_snapshot()``'s
+        ``prefetch_stages``).
+        """
+        staged = 0
+        seen: set = set()
+        with self.cache.pin_scope():
+            for q in queries:
+                for spec in q.scans.values():
+                    tkey = id(spec.table)
+                    if tkey in seen:
+                        continue
+                    seen.add(tkey)
+                    if self.cache.prefetch(spec.table,
+                                           self.versions.get(spec.table.name)):
+                        staged += 1
+        return staged
 
     # -- filter stage -------------------------------------------------------
 
@@ -979,4 +1018,5 @@ class PruningService:
                     counters=self.counters.snapshot(),
                     resilience=resilience_snapshot(self.resilience),
                     integrity=self.cache.integrity_snapshot(),
+                    latency=dict(self.latency),
                     plane_hit_rate=(mem["hits"] / total) if total else 0.0)

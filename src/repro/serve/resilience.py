@@ -86,6 +86,12 @@ COUNTER_REGISTRY = frozenset({
     "filter", "join", "join_bloom", "topk", "launches", "fallbacks",
     # report sections attached to each batch (PruningService.run_batch)
     "technique", "staging", "memory", "resilience", "integrity", "planes",
+    # latency/SLO counters (new_latency_counters; serve.frontend attaches
+    # the per-batch block as counters["latency"] and the service exposes
+    # the lifetime block through fleet_summary()["latency"])
+    "latency", "requests", "batches", "deadline_fired", "size_fired",
+    "flush_fired", "queue_depth_peak", "prefetches",
+    "p50_ms", "p99_ms", "max_ms",
 })
 
 
@@ -94,6 +100,24 @@ def new_resilience_counters() -> dict:
                 salvaged_batches=0, verdict_hits=0, verdict_misses=0,
                 verdict_deduped=0,
                 demotions={r: 0 for r in RUNGS[1:]})
+
+
+def new_latency_counters() -> dict:
+    """The serving front-end's latency/saturation family (CL006: every
+    key here is declared in COUNTER_REGISTRY).
+
+    requests / batches      admitted submissions and dispatched batches
+    deadline_fired /        what closed each batch: the deadline timer,
+    size_fired /            the size cap, or an explicit flush/drain
+    flush_fired
+    queue_depth_peak        deepest pending queue observed at any submit
+    prefetches              staging prefetches overlapped with launches
+    p50_ms / p99_ms /       end-to-end latency percentiles over the
+    max_ms                  retained sample window (max is lifetime-true)
+    """
+    return dict(requests=0, batches=0, deadline_fired=0, size_fired=0,
+                flush_fired=0, queue_depth_peak=0, prefetches=0,
+                p50_ms=0.0, p99_ms=0.0, max_ms=0.0)
 
 
 def resilience_snapshot(c: dict) -> dict:

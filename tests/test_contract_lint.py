@@ -439,6 +439,31 @@ class TestCounterRegistration:
             """, extra=self.REGISTRY)
         assert "CL006" not in rules(findings)
 
+    def test_flags_unregistered_report_section_write(self):
+        """PR 10 shape: the front-end attaches a new section to each
+        report's counters dict — the section name itself is a counter
+        key and must be registered."""
+        findings = lint("src/repro/serve/frontend.py", """\
+            class Frontend:
+                def _execute(self, rep):
+                    rep.counters["latency"] = dict(p50_ms=0.0)
+            """, extra=self.REGISTRY)
+        (f,) = [f for f in findings if f.rule == "CL006"]
+        assert "'latency'" in f.message
+
+    def test_registered_latency_family_passes(self):
+        reg = {"src/repro/serve/resilience.py":
+               'COUNTER_REGISTRY = frozenset({"latency", "p50_ms"})\n'}
+        findings = lint("src/repro/serve/frontend.py", """\
+            def new_latency_counters():
+                return dict(p50_ms=0.0)
+
+            class Frontend:
+                def _execute(self, rep):
+                    rep.counters["latency"] = dict(new_latency_counters())
+            """, extra=reg)
+        assert "CL006" not in rules(findings)
+
 
 # ---------------------------------------------------------------------------
 # finding / baseline engine

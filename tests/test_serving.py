@@ -75,3 +75,109 @@ class TestContinuousBatching:
         # the slot fills after one decode (15 + 1 == max_seq): the request
         # still finishes cleanly inside its KV region
         assert 1 <= len(out[rid]) <= 4 and batcher.active() == 0
+
+
+def _greedy_tokens(model, params, prompt, steps):
+    """Oracle: one-at-a-time greedy generation, no early stopping."""
+    gen = Generator(model, params, max_seq=64)
+    return gen.generate(np.asarray(prompt)[None, :], steps=steps)[0].tolist()
+
+
+def _truncate_at_eos(tokens, eos_id, max_new):
+    """What a correct batcher emits: stop after max_new or at eos."""
+    out = []
+    for t in tokens:
+        out.append(t)
+        if len(out) >= max_new or t == eos_id:
+            break
+    return out
+
+
+class TestAdmitTimeCompletion:
+    """Regression (PR 10): _admit appended the prefill-argmax token
+    without checking the done conditions — max_new=1 emitted 2 tokens,
+    and an eos-as-first-token request occupied a slot and kept
+    decoding."""
+
+    def test_max_new_one_emits_exactly_one_token(self, setup):
+        cfg, model, params = setup
+        rng = np.random.default_rng(10)
+        prompt = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+        want = _greedy_tokens(model, params, prompt, steps=1)
+        batcher = ContinuousBatcher(model, params, n_slots=2, max_seq=64)
+        rid = batcher.submit(prompt, max_new=1)
+        out = batcher.run()
+        assert out[rid] == want and len(out[rid]) == 1
+        assert batcher.active() == 0
+
+    def test_eos_first_token_finishes_without_occupying_a_slot(self, setup):
+        cfg, model, params = setup
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+        first = _greedy_tokens(model, params, prompt, steps=1)[0]
+        batcher = ContinuousBatcher(model, params, n_slots=2, max_seq=64,
+                                    eos_id=first)
+        rid = batcher.submit(prompt, max_new=8)
+        batcher._admit()                    # one admit pass, no decode
+        assert batcher.active() == 0        # finished, slot never taken
+        assert batcher.finished[rid].out == [first]
+        assert batcher.run() == {rid: [first]}
+
+    def test_admit_time_finish_frees_the_slot_for_the_queue(self, setup):
+        """An eos-first request in front of the queue must not starve
+        the request behind it out of the only slot."""
+        cfg, model, params = setup
+        rng = np.random.default_rng(12)
+        p_eos = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+        p_live = rng.integers(0, cfg.vocab, size=7).astype(np.int32)
+        eos = _greedy_tokens(model, params, p_eos, steps=1)[0]
+        want_live = _truncate_at_eos(
+            _greedy_tokens(model, params, p_live, steps=4), eos, 4)
+        batcher = ContinuousBatcher(model, params, n_slots=1, max_seq=64,
+                                    eos_id=eos)
+        a = batcher.submit(p_eos, max_new=8)
+        b = batcher.submit(p_live, max_new=4)
+        out = batcher.run()
+        assert out[a] == [eos]
+        assert out[b] == want_live
+
+
+class TestSlotRelease:
+    """Regression (PR 10): _step decoded every slot including freed ones
+    with stale last_tok/positions, and never zeroed last_tok on release —
+    a recycled slot could observe its predecessor's token."""
+
+    def test_last_tok_zeroed_on_release(self, setup):
+        cfg, model, params = setup
+        rng = np.random.default_rng(13)
+        batcher = ContinuousBatcher(model, params, n_slots=2, max_seq=64)
+        batcher.submit(rng.integers(0, cfg.vocab, size=5), max_new=4)
+        batcher.submit(rng.integers(0, cfg.vocab, size=9), max_new=2)
+        batcher.run()
+        assert batcher.active() == 0
+        np.testing.assert_array_equal(batcher.last_tok,
+                                      np.zeros_like(batcher.last_tok))
+        np.testing.assert_array_equal(batcher.positions,
+                                      np.zeros_like(batcher.positions))
+
+    def test_recycled_slot_parity_after_eos_release(self, setup):
+        """A request admitted into a slot an eos-stopped predecessor just
+        vacated must generate exactly what it would alone."""
+        cfg, model, params = setup
+        rng = np.random.default_rng(14)
+        p_a = rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+        p_b = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+        toks_a = _greedy_tokens(model, params, p_a, steps=6)
+        # stop A mid-stream: its second generated token becomes eos
+        eos = toks_a[1]
+        want_a = _truncate_at_eos(toks_a, eos, 6)
+        want_b = _truncate_at_eos(
+            _greedy_tokens(model, params, p_b, steps=5), eos, 5)
+        batcher = ContinuousBatcher(model, params, n_slots=1, max_seq=64,
+                                    eos_id=eos)
+        a = batcher.submit(p_a, max_new=6)
+        b = batcher.submit(p_b, max_new=5)
+        out = batcher.run()
+        assert out[a] == want_a
+        assert out[b] == want_b
+        assert int(batcher.last_tok[0]) == 0
